@@ -1,0 +1,41 @@
+"""Paper Table 1/2: channel characterization.
+
+For every channel: modeled p2p time at 1 B and 1 MB (α + s·β, Table 2
+parameters for AWS; TPU constants for ici/dcn), plus the *measured* cost of
+one simulated exchange on the instrumented software channel (us_per_call:
+SimTransport ping-pong wall time — the sim harness itself, not the modeled
+network)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.models import CHANNELS
+from repro.core.transport import SimTransport
+
+
+def _measure_sim_pingpong(nbytes: int, reps: int = 50) -> float:
+    t = SimTransport(2)
+    x = np.zeros((2, max(nbytes // 4, 1)), np.float32)
+    perm = [(0, 1), (1, 0)]
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        x = t.ppermute(x, perm)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    sim_1b = _measure_sim_pingpong(4)
+    sim_1mb = _measure_sim_pingpong(1_000_000)
+    for name, ch in CHANNELS.items():
+        t1 = ch.p2p_time(1.0)
+        t2 = ch.p2p_time(1_000_000.0)
+        rows.append((f"channels/{name}/p2p_1B", sim_1b,
+                     f"model={t1*1e6:.1f}us alpha={ch.alpha*1e6:.1f}us"))
+        rows.append((f"channels/{name}/p2p_1MB", sim_1mb,
+                     f"model={t2*1e3:.3f}ms bw={1/ch.beta/1e6:.0f}MBps "
+                     f"kind={ch.kind} push={ch.push}"))
+    return rows

@@ -1,0 +1,62 @@
+"""Paper Figure 5: collective latency vs worker count, per channel.
+
+For every (op, P, channel): derived = α-β-modeled completion time (the
+paper's Fig. 5 curves — storage channels use the mediated-algorithm models,
+direct channels the selected algorithm's round schedule); us_per_call =
+measured wall time of the *actual algorithm executing* on the instrumented
+sim channel (arbitrary P on one host — counts real rounds/bytes)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import algorithms as A
+from repro.core.models import CHANNELS, collective_time, mediated_collective
+from repro.core.selector import select
+from repro.core.transport import SimTransport
+
+OPS = {
+    "allreduce": lambda t, x: A.allreduce_recursive_doubling(t, x, "add"),
+    "bcast": lambda t, x: A.bcast_binomial(t, x, 0),
+    "reduce": lambda t, x: A.reduce_binomial(t, x, "add", 0),
+    "scan": lambda t, x: A.scan_hillis_steele(t, x, "add"),
+    "gather": lambda t, x: A.gather_ring(t, x[:, :4].copy()),
+    "scatter": lambda t, x: A.scatter_halving(t, np.repeat(x[:, None, :4], t.size, 1), 0),
+    "barrier": lambda t, x: A.barrier(t),
+}
+NBYTES = {"allreduce": 4, "bcast": 4, "reduce": 4, "scan": 4,
+          "gather": 20_000, "scatter": 20_000, "barrier": 1}
+
+
+def run():
+    rows = []
+    for op, fn in OPS.items():
+        for P in (2, 4, 8, 16, 32, 64):
+            x = np.random.default_rng(0).normal(size=(P, 16)).astype(np.float32)
+            t = SimTransport(P)
+            t0 = time.perf_counter()
+            fn(t, x.copy())
+            us = (time.perf_counter() - t0) * 1e6
+            parts = []
+            for ch in ("s3", "redis", "direct", "ici"):
+                spec = CHANNELS[ch]
+                if spec.kind == "mediated" and ch != "ici":
+                    try:
+                        mt = mediated_collective(op, NBYTES[op], P, spec).time
+                    except KeyError:
+                        mt = float("nan")
+                else:
+                    try:
+                        best = select(op, NBYTES[op], P, channels=(ch,))
+                        mt = best.time_s
+                    except ValueError:
+                        mt = float("nan")
+                parts.append(f"{ch}={mt*1e3:.2f}ms")
+            rows.append((
+                f"collectives/{op}/P{P}", us,
+                f"rounds={t.trace.rounds} bytes={t.trace.bytes_per_rank} "
+                + " ".join(parts),
+            ))
+    return rows

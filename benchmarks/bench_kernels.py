@@ -1,0 +1,73 @@
+"""Pallas-kernel throughput: the xla (production-on-CPU) backends measured
+for real, against the naive O(T^2)/recurrent references.  On TPU the pallas
+backends replace these; interpret-mode timings are not meaningful perf, so
+derived notes the validated-against oracle instead."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _timed(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention: chunked-xla vs naive ref at growing T (memory-bound win)
+    B, Hq, Hkv, d = 1, 4, 2, 64
+    for T in (512, 1024):
+        q = jnp.asarray(rng.normal(size=(B, Hq, T, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, Hkv, T, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, Hkv, T, d)), jnp.float32)
+        us_flash = _timed(
+            jax.jit(lambda a, b, c: ops.flash_attention(a, b, c, backend="xla")), q, k, v
+        )
+        us_ref = _timed(jax.jit(lambda a, b, c: ref.attention(a, b, c)), q, k, v)
+        flops = 4 * B * Hq * T * T / 2 * d
+        rows.append((
+            f"kernels/flash_attention/T{T}", us_flash,
+            f"ref={us_ref:.0f}us gflops={flops/us_flash/1e3:.2f} "
+            f"oracle_validated=interpret",
+        ))
+
+    # gla scan: chunked vs per-step recurrent oracle
+    for T in (512, 1024):
+        H, dk = 2, 32
+        q = jnp.asarray(rng.normal(size=(B, H, T, dk)), jnp.float32)
+        kk = jnp.asarray(rng.normal(size=(B, H, T, dk)), jnp.float32)
+        vv = jnp.asarray(rng.normal(size=(B, H, T, dk)), jnp.float32)
+        lf = jnp.asarray(-np.abs(rng.normal(size=(B, H, T)) * 0.5), jnp.float32)
+        ig = jnp.asarray(np.abs(rng.normal(size=(B, H, T))), jnp.float32)
+        us_gla = _timed(
+            jax.jit(lambda *a: ops.gla_scan(*a, backend="xla")[0]), q, kk, vv, lf, ig
+        )
+        us_rec = _timed(jax.jit(lambda *a: ref.gla_scan(*a)), q, kk, vv, lf, ig)
+        rows.append((
+            f"kernels/gla_scan/T{T}", us_gla,
+            f"recurrent_ref={us_rec:.0f}us speedup={us_rec/us_gla:.1f}x",
+        ))
+
+    # blockwise int8 quantization (compressed-allreduce hot path)
+    x = jnp.asarray(rng.normal(size=(64, 1 << 16)), jnp.float32)
+    us_q = _timed(jax.jit(lambda a: ops.quantize_blockwise(a, backend="xla")), x)
+    gbps = x.nbytes / (us_q / 1e6) / 1e9
+    rows.append((
+        "kernels/quantize_blockwise/16MB", us_q,
+        f"throughput={gbps:.2f}GBps wire_reduction=3.9x",
+    ))
+    return rows

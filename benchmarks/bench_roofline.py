@@ -1,0 +1,37 @@
+"""§Roofline reader: summarizes every dry-run artifact into CSV rows.
+
+derived: the three terms (ms), the dominant one, the roofline fraction
+(compute term / total — how close the cell is to being compute-limited),
+and the MODEL_FLOPS/HLO_FLOPS usefulness ratio."""
+
+from __future__ import annotations
+
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def run():
+    rows = []
+    if not os.path.isdir(ART):
+        return [("roofline/no_artifacts", None, "run launch.dryrun first")]
+    for fn in sorted(os.listdir(ART)):
+        if not fn.endswith(".json"):
+            continue
+        rec = json.load(open(os.path.join(ART, fn)))
+        cell = rec["cell"]
+        if rec.get("status") != "ok":
+            rows.append((f"roofline/{cell}", None, rec.get("status", "?")))
+            continue
+        t = rec["terms"]
+        tot = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        frac = t["compute_s"] / tot if tot else 0.0
+        rows.append((
+            f"roofline/{cell}", None,
+            f"compute={t['compute_s']*1e3:.1f}ms memory={t['memory_s']*1e3:.1f}ms "
+            f"collective={t['collective_s']*1e3:.1f}ms dominant={rec['dominant']} "
+            f"roofline_frac={frac:.2f} useful={rec['useful_flops_ratio']:.2f} "
+            f"fits={rec['memory']['fits']}",
+        ))
+    return rows

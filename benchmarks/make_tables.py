@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_tables [--dir dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def load(d):
+    recs = {}
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            r = json.load(open(os.path.join(d, fn)))
+            recs[r["cell"]] = r
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:,.1f}"
+
+
+def dryrun_table(recs, mesh="16x16"):
+    rows = ["| arch | shape | status | ~GiB/chip (cpu) | fits | collectives (count) |",
+            "|---|---|---|---|---|---|"]
+    for cell, r in recs.items():
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status'][:60]} | — | — | — |")
+            continue
+        m = r["memory"]
+        colls = ", ".join(f"{k}:{v}" for k, v in sorted(r["collective_counts"].items()))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{m['analytic']['total_gib']:.2f} ({m['peak_gib_cpu']:.1f}) | "
+            f"{'Y' if m['fits'] else 'N'} | {colls[:70]} |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(recs, mesh="16x16"):
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | dominant | "
+            "roofline frac | useful |",
+            "|---|---|---|---|---|---|---|---|"]
+    for cell, r in recs.items():
+        if r["mesh"] != mesh or r.get("status") != "ok":
+            continue
+        t = r["terms"]
+        tot = t["compute_s"] + t["memory_s"] + t["collective_s"]
+        frac = t["compute_s"] / tot if tot else 0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+            f"{r['dominant']} | {frac:.2f} | {r['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def multipod_table(recs):
+    rows = ["| arch | shape | 16x16 coll ms | 2x16x16 coll ms | dcn bytes/chip (2-pod) |",
+            "|---|---|---|---|---|"]
+    by = {}
+    for cell, r in recs.items():
+        if r.get("status") != "ok":
+            continue
+        by.setdefault((r["arch"], r["shape"]), {})[r["mesh"]] = r
+    for (arch, shape), m in sorted(by.items()):
+        if "16x16" not in m or "2x16x16" not in m:
+            continue
+        a, b = m["16x16"], m["2x16x16"]
+        rows.append(
+            f"| {arch} | {shape} | {fmt_ms(a['terms']['collective_s'])} | "
+            f"{fmt_ms(b['terms']['collective_s'])} | "
+            f"{b['terms']['dcn_wire_bytes']/1e6:,.0f} MB |"
+        )
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun")
+    args = ap.parse_args()
+    recs = load(os.path.join(HERE, "artifacts", args.dir))
+    print("## Dry-run (single pod)\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(recs))
+    print("\n## Multi-pod\n")
+    print(multipod_table(recs))
+
+
+if __name__ == "__main__":
+    main()

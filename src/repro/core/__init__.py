@@ -1,0 +1,28 @@
+"""FMI core: communicators, channels, collective algorithms, cost models.
+
+The paper's contribution as a composable JAX library:
+
+    from repro.core import Communicator, collectives
+
+    comm = Communicator(axes=("data",), sizes=(16,))
+    # inside jax.shard_map(..., axis_names={"data"}):
+    grads = collectives.allreduce_tree(grads, comm, algorithm="auto", mean=True)
+"""
+
+from . import algorithms, collectives, compression, hierarchical, models, pricing, selector
+from .communicator import Communicator
+from .transport import ChannelTrace, JaxTransport, SimTransport
+
+__all__ = [
+    "Communicator",
+    "JaxTransport",
+    "SimTransport",
+    "ChannelTrace",
+    "algorithms",
+    "collectives",
+    "compression",
+    "hierarchical",
+    "models",
+    "pricing",
+    "selector",
+]

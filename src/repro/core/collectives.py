@@ -1,0 +1,199 @@
+"""Public jax-level collective API (use inside ``jax.shard_map``).
+
+Every function takes a :class:`~repro.core.communicator.Communicator` and an
+``algorithm``:
+
+* ``'auto'``    — model-driven selection (paper §5) from the communicator's
+  channel α-β/price models, decided at **trace time** (payload size and
+  rank count are static);
+* ``'xla'``     — the provider-managed channel: ``jax.lax`` built-ins;
+* a named algorithm — explicit choice from
+  :data:`repro.core.algorithms.ALGORITHMS` (the paper's direct channel).
+
+Shape handling: latency-class algorithms (recursive doubling, binomial,
+scan) run on the payload as-is; bandwidth-class chunked algorithms (ring,
+Rabenseifner, halving/doubling) ravel + zero-pad the payload to a multiple
+of the communicator size, and un-pad on the way out.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import algorithms as A
+from .communicator import Communicator
+from .selector import select
+
+CHUNKED_ALLREDUCE = {"ring", "rabenseifner"}
+
+_XLA_OPS = {
+    "add": jax.lax.psum,
+    "max": jax.lax.pmax,
+    "min": jax.lax.pmin,
+}
+
+
+def _nbytes(x) -> int:
+    return int(math.prod(x.shape)) * x.dtype.itemsize
+
+
+def _resolve(op_name: str, x, comm: Communicator, algorithm: str, objective: str) -> str:
+    if algorithm != "auto":
+        return algorithm
+    cand = select(
+        op_name,
+        _nbytes(x),
+        comm.size,
+        channels=(comm.channel,),
+        objective=objective,
+    )
+    return cand.algorithm
+
+
+def _pad_flat(x, P: int):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % P
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat, n
+
+
+# ---------------------------------------------------------------------------
+
+
+def allreduce(x, comm: Communicator, op="add", algorithm="auto", objective="time"):
+    if comm.size == 1:
+        return x
+    algorithm = _resolve("allreduce", x, comm, algorithm, objective)
+    if algorithm == "xla":
+        if not isinstance(op, str) or op not in _XLA_OPS:
+            raise ValueError(f"xla channel supports ops {sorted(_XLA_OPS)}")
+        return _XLA_OPS[op](x, comm.axis_arg)
+    t = comm.transport()
+    if algorithm in CHUNKED_ALLREDUCE:
+        flat, n = _pad_flat(x, comm.size)
+        out = A.ALGORITHMS["allreduce"][algorithm](t, flat, op)
+        return out.reshape(-1)[:n].reshape(x.shape)
+    return A.ALGORITHMS["allreduce"][algorithm](t, x, op)
+
+
+def reduce_scatter(x, comm: Communicator, op="add", algorithm="auto"):
+    """Returns this rank's reduced chunk of ``x`` raveled: shape
+    ``[ceil(x.size/P)]`` under the natural convention (rank r owns chunk r)."""
+    if comm.size == 1:
+        return x.reshape(-1)
+    if algorithm == "auto":
+        algorithm = "recursive_halving"  # bw-optimal with log rounds on pow2
+    flat, n = _pad_flat(x, comm.size)
+    if algorithm == "xla":
+        if op != "add":
+            raise ValueError("xla reduce_scatter supports add")
+        return jax.lax.psum_scatter(flat, comm.axis_arg, scatter_dimension=0, tiled=True)
+    t = comm.transport()
+    if algorithm == "recursive_halving":
+        return A.halving_reduce_scatter(t, flat, op)
+    if algorithm == "ring":
+        chunk = A.ring_reduce_scatter(t, flat, op)
+        # normalize ring convention (rank r owns chunk (r+1)%P) -> natural
+        P = comm.size
+        perm = [(i, (i + 1) % P) for i in range(P)]
+        return t.ppermute(chunk, perm)
+    raise ValueError(f"unknown reduce_scatter algorithm {algorithm!r}")
+
+
+def allgather(chunk, comm: Communicator, algorithm="auto"):
+    """Natural convention: rank r contributes chunk r; returns flat
+    ``[P * chunk.size]`` (leading concat over ranks)."""
+    if comm.size == 1:
+        return chunk.reshape(-1)
+    if algorithm == "auto":
+        algorithm = "recursive_doubling"
+    if algorithm == "xla":
+        return jax.lax.all_gather(chunk.reshape(-1), comm.axis_arg, tiled=True)
+    t = comm.transport()
+    fn = (
+        A.doubling_allgather
+        if algorithm == "recursive_doubling"
+        else A.allgather_natural_ring
+    )
+    out = fn(t, chunk.reshape(-1))
+    return out.reshape(-1)
+
+
+def alltoall(x, comm: Communicator, algorithm="auto"):
+    """``x``: ``[P, c, ...]``; slot j goes to rank j, returns slot j from rank j."""
+    if comm.size == 1:
+        return x
+    if x.shape[0] != comm.size:
+        raise ValueError(f"leading dim {x.shape[0]} != comm size {comm.size}")
+    if algorithm == "auto":
+        algorithm = "pairwise"
+    if algorithm == "xla":
+        return jax.lax.all_to_all(x, comm.axis_arg, split_axis=0, concat_axis=0, tiled=False)
+    t = comm.transport()
+    return A.alltoall_pairwise(t, x)
+
+
+def bcast(x, comm: Communicator, root=0, algorithm="binomial"):
+    if comm.size == 1:
+        return x
+    t = comm.transport()
+    return A.bcast_binomial(t, x, root=root)
+
+
+def reduce(x, comm: Communicator, op="add", root=0, algorithm="binomial"):
+    if comm.size == 1:
+        return x
+    t = comm.transport()
+    return A.reduce_binomial(t, x, op=op, root=root)
+
+
+def scan(x, comm: Communicator, op="add"):
+    """Inclusive prefix scan across ranks (Hillis–Steele, ⌈log₂P⌉ rounds)."""
+    if comm.size == 1:
+        return x
+    t = comm.transport()
+    return A.scan_hillis_steele(t, x, op=op)
+
+
+def barrier(comm: Communicator):
+    if comm.size == 1:
+        return jnp.ones((1,), jnp.int32)
+    t = comm.transport()
+    return A.barrier(t)
+
+
+# ---------------------------------------------------------------------------
+# Pytree buckets — gradient-sync entry point used by training
+# ---------------------------------------------------------------------------
+
+
+def allreduce_tree(tree, comm: Communicator, op="add", algorithm="auto",
+                   objective="time", mean: bool = False):
+    """Allreduce a pytree (e.g. gradients): leaves are grouped by dtype,
+    raveled and fused into one payload per dtype (communication bucketing),
+    reduced with one collective each, then split back.  ``mean=True``
+    divides by the communicator size (data-parallel gradient averaging)."""
+    if comm.size == 1:
+        return tree
+    leaves, treedef = jax.tree.flatten(tree)
+    by_dtype: dict[Any, list[int]] = {}
+    for i, leaf in enumerate(leaves):
+        by_dtype.setdefault(leaf.dtype, []).append(i)
+    out = list(leaves)
+    for dtype, idxs in by_dtype.items():
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+        red = allreduce(flat, comm, op=op, algorithm=algorithm, objective=objective)
+        if mean:
+            red = red / comm.size
+        off = 0
+        for i in idxs:
+            n = math.prod(leaves[i].shape)
+            out[i] = jax.lax.dynamic_slice_in_dim(red, off, n).reshape(leaves[i].shape)
+            off += n
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,104 @@
+"""MPI-style communicators over mesh axes (paper §3.5).
+
+A :class:`Communicator` is the FMI unit of group communication: an ordered
+group of N ranks with ids ``[0, N)``.  On the TPU mesh a communicator is
+bound to one or more **named mesh axes** (rank = row-major index over the
+axes) plus the **channel** whose α-β/price model governs algorithm
+selection.  Collective methods are usable *inside* ``jax.shard_map`` where
+the bound axes are manual; the same object carries the static metadata the
+selector needs at trace time.
+
+Mirroring the paper's interface::
+
+    comm = Communicator(axes=("data",), sizes=(16,))
+    grads = comm.allreduce(grads, op="add", algorithm="auto")
+
+Sub-communicators (paper: "an application can create multiple communicators
+with different numbers of peers or lifetimes") are created with
+:meth:`Communicator.sub` — e.g. the per-pod and cross-pod communicators of a
+hierarchical allreduce.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+from .transport import JaxTransport
+
+
+@dataclass(frozen=True)
+class Communicator:
+    axes: tuple[str, ...]
+    sizes: tuple[int, ...]
+    channel: str = "ici"
+    name: str = "world"
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.sizes):
+            raise ValueError("axes/sizes mismatch")
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.sizes)
+
+    @property
+    def axis_arg(self):
+        """Axis argument for jax.lax collectives."""
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+    def transport(self) -> JaxTransport:
+        """Direct-channel transport; call inside shard_map only."""
+        return JaxTransport(self.axes, self.sizes)
+
+    def sub(self, *axes: str) -> "Communicator":
+        """Sub-communicator over a subset of this communicator's axes."""
+        idx = {a: i for i, a in enumerate(self.axes)}
+        for a in axes:
+            if a not in idx:
+                raise ValueError(f"axis {a!r} not in {self.axes}")
+        sizes = tuple(self.sizes[idx[a]] for a in axes)
+        return replace(self, axes=tuple(axes), sizes=sizes, name="+".join(axes))
+
+    # ------------------------------------------------------------------
+    # MPI-flavoured methods (thin wrappers over repro.core.collectives)
+    # ------------------------------------------------------------------
+    def allreduce(self, x, op="add", algorithm="auto", objective="time"):
+        from . import collectives as C
+
+        return C.allreduce(x, self, op=op, algorithm=algorithm, objective=objective)
+
+    def reduce_scatter(self, x, op="add", algorithm="auto"):
+        from . import collectives as C
+
+        return C.reduce_scatter(x, self, op=op, algorithm=algorithm)
+
+    def allgather(self, chunk, algorithm="auto"):
+        from . import collectives as C
+
+        return C.allgather(chunk, self, algorithm=algorithm)
+
+    def alltoall(self, x, algorithm="auto"):
+        from . import collectives as C
+
+        return C.alltoall(x, self, algorithm=algorithm)
+
+    def bcast(self, x, root=0, algorithm="binomial"):
+        from . import collectives as C
+
+        return C.bcast(x, self, root=root, algorithm=algorithm)
+
+    def reduce(self, x, op="add", root=0, algorithm="binomial"):
+        from . import collectives as C
+
+        return C.reduce(x, self, op=op, root=root, algorithm=algorithm)
+
+    def scan(self, x, op="add"):
+        from . import collectives as C
+
+        return C.scan(x, self, op=op)
+
+    def barrier(self):
+        from . import collectives as C
+
+        return C.barrier(self)

@@ -1,0 +1,104 @@
+"""Model-driven channel/algorithm selection (the paper's §5 pay-off).
+
+Given (op, payload bytes, participants, channel, objective) the selector
+enumerates every feasible algorithm, prices it with the α-β time model and
+the $ model, and returns the argmin.  ``explain()`` returns the full
+candidate table — used by benchmarks and by ``launch/dryrun.py --explain``.
+
+The same machinery selects between *channels* (e.g. hierarchical ici+dcn vs
+flat dcn for cross-pod reduction) — mirroring the paper's choice between S3
+/ DynamoDB / Redis / direct TCP.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .models import (
+    CHANNELS,
+    DIRECT_ALGOS,
+    ChannelSpec,
+    collective_time,
+    feasible,
+    mediated_collective,
+)
+from .pricing import collective_cost
+
+
+@dataclass(frozen=True)
+class Candidate:
+    op: str
+    channel: str
+    algorithm: str
+    time_s: float
+    price_usd: float
+
+    def objective(self, objective: str, price_weight: float = 0.5) -> float:
+        if objective == "time":
+            return self.time_s
+        if objective == "price":
+            return self.price_usd
+        if objective == "weighted":
+            return (1 - price_weight) * self.time_s + price_weight * self.price_usd
+        raise ValueError(f"unknown objective {objective!r}")
+
+
+def candidates(
+    op: str,
+    nbytes: float,
+    P: int,
+    channels: tuple[str, ...] = ("ici",),
+    mem_gib: float = 2.0,
+) -> list[Candidate]:
+    out: list[Candidate] = []
+    for ch_name in channels:
+        ch = CHANNELS[ch_name]
+        if ch.kind == "mediated" and ch_name in ("s3", "dynamodb", "redis"):
+            try:
+                m = mediated_collective(op, nbytes, P, ch)
+            except KeyError:
+                continue
+            cost = collective_cost(op, nbytes, P, ch_name, mem_gib=mem_gib)
+            out.append(Candidate(op, ch_name, "storage", m.time, cost.total_usd))
+            continue
+        for algo in DIRECT_ALGOS.get(op, []):
+            if not feasible(op, algo, P):
+                continue
+            t = collective_time(op, algo, nbytes, P, ch)
+            cost = collective_cost(op, nbytes, P, ch_name, algo=algo, mem_gib=mem_gib)
+            out.append(Candidate(op, ch_name, algo, t, cost.total_usd))
+    return out
+
+
+def select(
+    op: str,
+    nbytes: float,
+    P: int,
+    channels: tuple[str, ...] = ("ici",),
+    objective: str = "time",
+    mem_gib: float = 2.0,
+    price_weight: float = 0.5,
+) -> Candidate:
+    cands = candidates(op, nbytes, P, channels, mem_gib)
+    if not cands:
+        raise ValueError(f"no feasible algorithm for {op} with P={P} on {channels}")
+    return min(cands, key=lambda c: c.objective(objective, price_weight))
+
+
+def explain(
+    op: str,
+    nbytes: float,
+    P: int,
+    channels: tuple[str, ...] = ("ici",),
+    mem_gib: float = 2.0,
+) -> str:
+    rows = sorted(candidates(op, nbytes, P, channels, mem_gib), key=lambda c: c.time_s)
+    lines = [
+        f"{'channel':10s} {'algorithm':20s} {'time':>12s} {'price $':>14s}",
+        "-" * 60,
+    ]
+    for c in rows:
+        lines.append(
+            f"{c.channel:10s} {c.algorithm:20s} {c.time_s*1e6:10.1f}us {c.price_usd:14.3e}"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,282 @@
+"""Channel transports for FMI collectives.
+
+The paper (§3.2) separates *algorithms* (channel-agnostic, operate on a
+communicator) from *channels* (the medium moving raw bytes).  We keep that
+split: every collective algorithm in :mod:`repro.core.algorithms` is written
+once against the :class:`Transport` interface below and runs unchanged on
+
+* :class:`JaxTransport` — the **direct ICI channel**: ``jax.lax.ppermute``
+  schedules inside ``jax.shard_map`` (the TPU analogue of the paper's direct
+  TCP channel; the mesh plays the role of the hole-punching rendezvous), and
+* :class:`SimTransport` — an instrumented software channel that executes all
+  ranks in lockstep on stacked numpy arrays.  It supports **arbitrary rank
+  counts** (including non-powers-of-two), counts rounds and per-rank bytes,
+  and is the oracle for property tests and for validating the α-β cost
+  models in :mod:`repro.core.models` (the counted rounds/bytes must match
+  the model exactly).
+
+SPMD convention
+---------------
+Algorithms are written in SPMD style: one logical program per rank.  A
+"logical array" has shape ``[*shape]``.  ``SimTransport`` physically stores
+``[P, *shape]`` (leading rank axis) and vectorizes every transport op over
+it; ``JaxTransport`` stores exactly ``[*shape]`` per device.  Rank-dependent
+control flow is expressed with :meth:`Transport.where` masks and
+rank-indexed dynamic slices — never with python ``if`` on the rank.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Perm = Sequence[tuple[int, int]]
+
+
+def is_pow2(n: int) -> bool:
+    return n > 0 and (n & (n - 1)) == 0
+
+
+def ilog2(n: int) -> int:
+    if not is_pow2(n):
+        raise ValueError(f"expected a power of two, got {n}")
+    return n.bit_length() - 1
+
+
+class Transport:
+    """Abstract SPMD transport — the paper's 'channel' operating on raw memory."""
+
+    size: int
+    xp: Any  # numpy-like module
+
+    # -- identity ---------------------------------------------------------
+    def rank(self):
+        raise NotImplementedError
+
+    # -- the single communication primitive --------------------------------
+    def ppermute(self, x, perm: Perm):
+        """Rank ``dst`` receives ``x`` from ``src`` for each ``(src, dst)``;
+        ranks that receive nothing get zeros (jax.lax.ppermute semantics)."""
+        raise NotImplementedError
+
+    # -- rank-masked helpers (shape-polymorphic between sim and jax) -------
+    def where(self, cond, a, b):
+        raise NotImplementedError
+
+    def dynslice(self, x, start, size: int, axis: int = 0):
+        """``lax.dynamic_slice_in_dim`` with a possibly rank-dependent start."""
+        raise NotImplementedError
+
+    def dynupdate(self, x, update, start, axis: int = 0):
+        raise NotImplementedError
+
+    def concat(self, parts, axis: int = 0):
+        raise NotImplementedError
+
+    def reshape(self, x, shape: tuple[int, ...]):
+        raise NotImplementedError
+
+    def astype(self, x, dtype):
+        return x.astype(dtype)
+
+    def zeros(self, shape: tuple[int, ...], dtype):
+        raise NotImplementedError
+
+    def ones(self, shape: tuple[int, ...], dtype):
+        raise NotImplementedError
+
+    # -- instrumentation (no-ops on jax) ------------------------------------
+    def tick(self, nbytes_per_rank: int, participants: int | None = None):
+        """Record one communication round moving ``nbytes_per_rank`` bytes."""
+
+    # logical shape (without the stacked rank axis)
+    def lshape(self, x) -> tuple[int, ...]:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Direct channel: ppermute inside shard_map
+# ---------------------------------------------------------------------------
+
+
+class JaxTransport(Transport):
+    """Direct-channel transport over named mesh axes inside ``shard_map``.
+
+    ``axes`` may be a single axis name or a tuple; the flat rank is row-major
+    over the tuple (matches ``jax.lax`` semantics for axis-name tuples).
+    """
+
+    xp = jnp
+
+    def __init__(self, axes: str | tuple[str, ...], sizes: int | tuple[int, ...]):
+        self.axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        sizes = (sizes,) if isinstance(sizes, int) else tuple(sizes)
+        if len(sizes) != len(self.axes):
+            raise ValueError("axes/sizes length mismatch")
+        self.axis_sizes = sizes
+        self.size = int(np.prod(sizes))
+
+    def rank(self):
+        return jax.lax.axis_index(self.axes if len(self.axes) > 1 else self.axes[0])
+
+    def ppermute(self, x, perm: Perm):
+        axis = self.axes if len(self.axes) > 1 else self.axes[0]
+        return jax.lax.ppermute(x, axis, perm)
+
+    def where(self, cond, a, b):
+        return jnp.where(cond, a, b)
+
+    def dynslice(self, x, start, size: int, axis: int = 0):
+        return jax.lax.dynamic_slice_in_dim(x, start, size, axis=axis)
+
+    def dynupdate(self, x, update, start, axis: int = 0):
+        return jax.lax.dynamic_update_slice_in_dim(x, update, start, axis=axis)
+
+    def concat(self, parts, axis: int = 0):
+        return jnp.concatenate(parts, axis=axis)
+
+    def reshape(self, x, shape):
+        return jnp.reshape(x, shape)
+
+    def zeros(self, shape, dtype):
+        return jnp.zeros(shape, dtype)
+
+    def ones(self, shape, dtype):
+        return jnp.ones(shape, dtype)
+
+    def lshape(self, x):
+        return tuple(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Instrumented software channel (testing + cost-model oracle)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChannelTrace:
+    """What the α-β model needs: rounds and the max bytes any rank moved."""
+
+    rounds: int = 0
+    bytes_per_rank: int = 0  # max over ranks of bytes *sent* (α-β convention)
+    total_bytes: int = 0
+    per_round: list = field(default_factory=list)
+
+    def time(self, alpha: float, beta: float) -> float:
+        """α-β time assuming full overlap across ranks within a round."""
+        return sum(alpha + b * beta for (b, _n) in self.per_round)
+
+
+class SimTransport(Transport):
+    """All ranks in lockstep on stacked ``[P, *shape]`` numpy arrays."""
+
+    xp = np
+
+    def __init__(self, size: int):
+        self.size = int(size)
+        self.trace = ChannelTrace()
+
+    # stacking helpers ------------------------------------------------------
+    def stack(self, per_rank: Sequence[np.ndarray]) -> np.ndarray:
+        assert len(per_rank) == self.size
+        return np.stack([np.asarray(a) for a in per_rank], axis=0)
+
+    def unstack(self, x: np.ndarray) -> list[np.ndarray]:
+        return [x[i] for i in range(self.size)]
+
+    def rank(self):
+        return np.arange(self.size)
+
+    def ppermute(self, x, perm: Perm):
+        out = np.zeros_like(x)
+        max_sent = 0
+        itemsize = x.dtype.itemsize
+        per_msg = int(np.prod(x.shape[1:])) * itemsize
+        for src, dst in perm:
+            out[dst] = x[src]
+            max_sent = max(max_sent, per_msg)
+        self.trace.rounds += 1
+        self.trace.bytes_per_rank += max_sent
+        self.trace.total_bytes += per_msg * len(list(perm))
+        self.trace.per_round.append((max_sent, len(list(perm))))
+        return out
+
+    def _bcast_cond(self, cond, ref):
+        cond = np.asarray(cond)
+        if cond.ndim == 0:
+            return cond
+        # [P] -> [P, 1, 1, ...] to broadcast against [P, *shape]
+        return cond.reshape((self.size,) + (1,) * (np.ndim(ref) - 1))
+
+    def where(self, cond, a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        ref = a if a.ndim >= b.ndim else b
+        return np.where(self._bcast_cond(cond, ref), a, b)
+
+    def dynslice(self, x, start, size: int, axis: int = 0):
+        ax = axis + 1  # skip rank axis
+        start = np.broadcast_to(np.asarray(start), (self.size,))
+        out = np.stack(
+            [np.take(x[i], np.arange(start[i], start[i] + size), axis=axis) for i in range(self.size)]
+        )
+        del ax
+        return out
+
+    def dynupdate(self, x, update, start, axis: int = 0):
+        start = np.broadcast_to(np.asarray(start), (self.size,))
+        out = np.array(x)
+        n = update.shape[axis + 1]
+        for i in range(self.size):
+            idx = [slice(None)] * (x.ndim - 1)
+            idx[axis] = slice(int(start[i]), int(start[i]) + n)
+            out[i][tuple(idx)] = update[i]
+        return out
+
+    def concat(self, parts, axis: int = 0):
+        return np.concatenate(parts, axis=axis + 1)
+
+    def reshape(self, x, shape):
+        return np.reshape(x, (self.size,) + tuple(shape))
+
+    def zeros(self, shape, dtype):
+        return np.zeros((self.size,) + tuple(shape), dtype)
+
+    def ones(self, shape, dtype):
+        return np.ones((self.size,) + tuple(shape), dtype)
+
+    def lshape(self, x):
+        return tuple(x.shape[1:])
+
+    def tick(self, nbytes_per_rank: int, participants: int | None = None):
+        self.trace.rounds += 1
+        self.trace.bytes_per_rank += nbytes_per_rank
+        n = participants if participants is not None else self.size
+        self.trace.total_bytes += nbytes_per_rank * n
+        self.trace.per_round.append((nbytes_per_rank, n))
+
+
+# ---------------------------------------------------------------------------
+# Reduction operators (paper: "users can provide an arbitrary function
+# object as a reduction operation")
+# ---------------------------------------------------------------------------
+
+OPS: dict[str, Callable] = {
+    "add": lambda a, b: a + b,
+    "max": lambda a, b: jnp.maximum(a, b) if isinstance(a, jax.Array) else np.maximum(a, b),
+    "min": lambda a, b: jnp.minimum(a, b) if isinstance(a, jax.Array) else np.minimum(a, b),
+    "prod": lambda a, b: a * b,
+}
+
+
+def resolve_op(op) -> Callable:
+    if callable(op):
+        return op
+    try:
+        return OPS[op]
+    except KeyError:
+        raise ValueError(f"unknown reduction op {op!r}; known: {sorted(OPS)}") from None

@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, Pipeline, make_batch_specs, synthetic_batch
+
+__all__ = ["DataConfig", "Pipeline", "synthetic_batch", "make_batch_specs"]

@@ -1,0 +1,235 @@
+"""Backend-dispatching jit'd wrappers for the Pallas kernels.
+
+Three backends per op:
+
+* ``pallas``     — the Pallas TPU kernel (``interpret=False``); TPU only.
+* ``interpret``  — the same kernel body executed on CPU (validation).
+* ``xla``        — a memory-safe pure-jnp implementation (chunked
+  flash-attention via ``lax.scan`` online softmax; chunked GLA via
+  ``lax.scan`` over chunk blocks).  This is the default on CPU — it is what
+  the dry-run compiles, so HLO cost/memory analysis reflects a flash-style
+  schedule, not an O(T²)-memory naive attention.
+
+``backend='auto'`` picks pallas on TPU and xla elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import quantize as _qz
+from . import ssm_scan as _ss
+from . import ref as _ref
+
+NEG_INF = -1e30
+
+
+def _default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def _xla_flash_attention(q, k, v, causal=True, window=0, q_offset=0, bk=512):
+    """Chunked online-softmax attention in pure jnp (lax.scan over kv blocks).
+
+    O(T·bk) live memory instead of O(T·S); numerics identical to flash.
+    Inputs stay in their storage dtype (bf16): scores/accumulators get f32
+    via ``preferred_element_type`` on the matmuls — explicit ``astype(f32)``
+    converts get hoisted out of the loop by XLA and materialize full f32
+    copies of K/V (measured: +4 GiB/chip on the 32k cells).
+    """
+    B, Hq, T, d = q.shape
+    _, Hkv, S, dv = v.shape
+    group = Hq // Hkv
+    bk = min(bk, S)
+    nk = -(-S // bk)
+    pad = nk * bk - S
+    kf = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kf = kf.reshape(B, Hkv, nk, bk, d)
+    vf = vf.reshape(B, Hkv, nk, bk, dv)
+
+    scale = d**-0.5
+    q_pos = jnp.arange(T) + q_offset  # [T]
+    bdims = (((3,), (3,)), ((0, 1), (0, 1)))  # contract d, batch (B, H)
+    pv_dims = (((3,), (2,)), ((0, 1), (0, 1)))  # contract bk
+
+    # checkpoint each kv block: backward recomputes the [T, bk] score tile
+    # instead of saving it — this IS flash-attention backward, and it is
+    # what keeps the 32k-prefill cells inside 16 GiB/chip
+    @jax.checkpoint
+    def step(carry, blk):
+        m, l, acc = carry
+        kb, vb, ki = blk  # [B, Hkv, bk, d], [B, Hkv, bk, dv], scalar
+        kb = jnp.repeat(kb, group, axis=1)
+        vb = jnp.repeat(vb, group, axis=1)
+        s = jax.lax.dot_general(q, kb, bdims, preferred_element_type=jnp.float32)
+        s = s * scale  # [B, Hq, T, bk] f32
+        k_pos = ki * bk + jnp.arange(bk)  # [bk]
+        mask = (k_pos[None, :] < S) & jnp.ones((T, 1), bool)
+        if causal:
+            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(q.dtype), vb, pv_dims, preferred_element_type=jnp.float32
+        )
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Hq, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, T), jnp.float32)
+    a0 = jnp.zeros((B, Hq, T, dv), jnp.float32)
+    kb = jnp.moveaxis(kf, 2, 0)
+    vb = jnp.moveaxis(vf, 2, 0)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "backend", "bq", "bk")
+)
+def flash_attention(
+    q, k, v, causal=True, window=0, q_offset=0, backend="auto", bq=128, bk=128
+):
+    """GQA flash attention: q [B,Hq,T,d], k/v [B,Hkv,S,d(v)] -> [B,Hq,T,dv].
+
+    ``q_offset`` may be dynamic (a traced position — the decode path); the
+    Pallas kernel needs it static, so dynamic offsets fall back to the xla
+    backend (decode is a matvec anyway — the kernel targets train/prefill).
+    """
+    if backend == "auto":
+        backend = _default_backend()
+    static_off = isinstance(q_offset, int)
+    if backend == "xla" or not static_off:
+        return _xla_flash_attention(q, k, v, causal, window, q_offset)
+    if backend == "ref":
+        return _ref.attention(q, k, v, causal, window, q_offset)
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, interpret=(backend == "interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# gated linear attention scan
+# ---------------------------------------------------------------------------
+
+
+def _xla_gla_scan(q, k, v, log_f, i_gate, normalize=True, chunk=128):
+    """Chunked GLA in pure jnp: lax.scan over chunks, matmul-dense inside."""
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, T)
+    nc = -(-T // L)
+    pad = nc * L - T
+
+    def padt(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 3))
+
+    qf = padt(q).astype(jnp.float32) * (dk**-0.5)
+    kf = padt(k).astype(jnp.float32)
+    vf = padt(v).astype(jnp.float32)
+    lf = padt(log_f).astype(jnp.float32)
+    ig = padt(i_gate).astype(jnp.float32)
+    if pad:
+        valid = jnp.arange(nc * L) < T
+        lf = jnp.where(valid, lf, 0.0)
+        ig = jnp.where(valid, ig, 0.0)
+
+    def split(x):  # [B,H,nc*L,...] -> [nc, B, H, L, ...]
+        x = x.reshape(x.shape[:2] + (nc, L) + x.shape[3:])
+        return jnp.moveaxis(x, 2, 0)
+
+    qs, ks, vs, lfs, igs = map(split, (qf, kf, vf, lf, ig))
+    ones = jnp.ones((B, H, L, 1), jnp.float32)
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+
+    def step(C, blk):
+        qc, kc, vc, lfc, igc = blk
+        v_aug = jnp.concatenate([vc, ones], axis=-1)
+        b = jnp.cumsum(lfc, axis=-1)  # [B,H,L]
+        decay = jnp.where(causal, jnp.exp(b[..., :, None] - b[..., None, :]), 0.0)
+        decay = decay * igc[..., None, :]
+        s = jnp.einsum("bhtd,bhsd->bhts", qc, kc)
+        intra = jnp.einsum("bhts,bhsv->bhtv", s * decay, v_aug)
+        inter = jnp.exp(b)[..., None] * jnp.einsum("bhtk,bhkv->bhtv", qc, C)
+        num = intra + inter
+        b_last = b[..., -1]
+        w = jnp.exp(b_last[..., None] - b) * igc
+        C = jnp.exp(b_last)[..., None, None] * C + jnp.einsum(
+            "bhsk,bhsv->bhkv", kc * w[..., None], v_aug
+        )
+        return C, num
+
+    C0 = jnp.zeros((B, H, dk, dv + 1), jnp.float32)
+    C, nums = jax.lax.scan(step, C0, (qs, ks, vs, lfs, igs))
+    nums = jnp.moveaxis(nums, 0, 2).reshape(B, H, nc * L, dv + 1)[:, :, :T]
+    if normalize:
+        den = jnp.maximum(jnp.abs(nums[..., dv:]), 1.0)
+        out = nums[..., :dv] / den
+    else:
+        out = nums[..., :dv]
+    return out.astype(q.dtype), C
+
+
+@functools.partial(jax.jit, static_argnames=("normalize", "chunk", "backend"))
+def gla_scan(q, k, v, log_f, i_gate, normalize=True, chunk=128, backend="auto"):
+    """Chunked GLA/mLSTM scan -> (out [B,H,T,dv], state [B,H,dk,dv+1])."""
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "xla":
+        return _xla_gla_scan(q, k, v, log_f, i_gate, normalize, chunk)
+    return _ss.gla_scan(
+        q, k, v, log_f, i_gate, normalize=normalize, chunk=chunk,
+        interpret=(backend == "interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_blockwise(x, block=256, backend="auto"):
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "xla":
+        return _ref.quantize_blockwise(x, block)
+    flat = x.reshape(1, -1) if x.ndim == 1 else x
+    q, s = _qz.quantize_blockwise(flat, block=block, interpret=(backend == "interpret"))
+    if x.ndim == 1:
+        return q.reshape(-1), s.reshape(-1)
+    return q, s
+
+
+def dequantize_blockwise(q, s, block=256, backend="auto", out_dtype=jnp.float32):
+    if backend == "auto":
+        backend = _default_backend()
+    if backend == "xla":
+        return _ref.dequantize_blockwise(q, s, block)
+    flat_q = q.reshape(1, -1) if q.ndim == 1 else q
+    flat_s = s.reshape(1, -1) if s.ndim == 1 else s
+    out = _qz.dequantize_blockwise(
+        flat_q, flat_s, block=block, interpret=(backend == "interpret"),
+        out_dtype=out_dtype,
+    )
+    return out.reshape(q.shape)

@@ -1,0 +1,126 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are written for clarity, not speed: naive softmax attention with an
+explicit [T, S] score matrix, per-step recurrent linear-attention scan, and
+straightforward blockwise quantization.  Kernel tests sweep shapes/dtypes
+and ``assert_allclose`` the Pallas (interpret=True) outputs against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def attention(
+    q: jax.Array,  # [B, Hq, T, d]
+    k: jax.Array,  # [B, Hkv, S, d]
+    v: jax.Array,  # [B, Hkv, S, dv]
+    causal: bool = True,
+    window: int = 0,  # 0 = unlimited; else sliding window (causal only)
+    q_offset: int = 0,  # absolute position of q[0] (decode: S_cache)
+) -> jax.Array:
+    """Naive softmax attention with GQA (Hq % Hkv == 0), f32 math."""
+    B, Hq, T, d = q.shape
+    _, Hkv, S, dv = v.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    qf = q.astype(jnp.float32) * (d**-0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    # expand kv heads to match q heads
+    kf = jnp.repeat(kf, group, axis=1)
+    vf = jnp.repeat(vf, group, axis=1)
+    scores = jnp.einsum("bhtd,bhsd->bhts", qf, kf)
+    q_pos = jnp.arange(T)[:, None] + q_offset
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (k_pos > q_pos - window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# gated linear attention / mLSTM / SSD scan
+# ---------------------------------------------------------------------------
+
+
+def gla_scan(
+    q: jax.Array,  # [B, H, T, dk]
+    k: jax.Array,  # [B, H, T, dk]
+    v: jax.Array,  # [B, H, T, dv]
+    log_f: jax.Array,  # [B, H, T]  log forget gate in (-inf, 0]
+    i_gate: jax.Array,  # [B, H, T]  input gate (>= 0)
+    normalize: bool = True,
+) -> jax.Array:
+    """Recurrent oracle for the chunked GLA kernel.
+
+    State: C_t = f_t · C_{t-1} + i_t · k_t v_tᵀ ;  n_t = f_t · n_{t-1} + i_t·k_t
+    Out:   o_t = (q_tᵀ C_t) / max(|q_tᵀ n_t|, 1)      (mLSTM normalizer)
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    qf, kf, vf = (x.astype(f32) for x in (q, k, v))
+    qf = qf * (dk**-0.5)
+    ff = jnp.exp(log_f.astype(f32))
+    ii = i_gate.astype(f32)
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, ft, it = xs
+        C = ft[..., None, None] * C + it[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :]
+        )
+        n = ft[..., None] * n + it[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        if normalize:
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n)), 1.0)
+            out = num / den[..., None]
+        else:
+            out = num
+        return (C, n), out
+
+    C0 = jnp.zeros((B, H, dk, dv), f32)
+    n0 = jnp.zeros((B, H, dk), f32)
+    xs = (
+        jnp.moveaxis(qf, 2, 0),
+        jnp.moveaxis(kf, 2, 0),
+        jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(ff, 2, 0),
+        jnp.moveaxis(ii, 2, 0),
+    )
+    (_, _), outs = jax.lax.scan(step, (C0, n0), xs)
+    return jnp.moveaxis(outs, 0, 2).astype(q.dtype)  # [B, H, T, dv]
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_blockwise(x: jax.Array, block: int = 256):
+    """[..., n] (n % block == 0) -> (int8 [..., n], f32 scales [..., n/block])."""
+    shape = x.shape
+    xb = x.reshape(shape[:-1] + (shape[-1] // block, block)).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def dequantize_blockwise(q: jax.Array, scale: jax.Array, block: int = 256):
+    shape = q.shape
+    qb = q.reshape(shape[:-1] + (shape[-1] // block, block)).astype(jnp.float32)
+    return (qb * scale[..., None]).reshape(shape)

@@ -1,0 +1,249 @@
+"""Analytic FLOP/byte accounting for the roofline (EXPERIMENTS.md §Roofline).
+
+Why analytic: XLA's ``cost_analysis()`` counts a ``while`` (scan) body ONCE
+regardless of trip count (verified experimentally — see EXPERIMENTS.md
+§Dry-run caveats), so a scanned 100-layer model under-reports FLOPs ~100x.
+We therefore compute exact FLOPs from the architecture (we own every layer),
+and validate against ``cost_analysis`` on *unrolled* reduced configs in
+tests/test_analysis.py (agreement within tolerance).  The compiled numbers
+are still recorded verbatim in every dry-run artifact.
+
+Conventions: 1 MAC = 2 FLOPs.  Train = 4x forward-layer FLOPs (fwd + 2x bwd
++ 1x remat recompute; the lm head gets 3x — it is outside the remat scan).
+Causal attention scores average ctx/2 per token at train/prefill.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from ..models import lm
+from ..models.config import ModelConfig
+
+
+def _attn_flops_per_tok(cfg: ModelConfig, ctx: float) -> float:
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    proj = 2 * D * (Hq + 2 * Hkv) * hd + 2 * Hq * hd * D
+    scores = 2 * 2 * Hq * hd * ctx  # qk^T + pv
+    return proj + scores
+
+
+def _mla_flops_per_tok(cfg: ModelConfig, ctx: float, decode: bool) -> float:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    q = 2 * D * m.q_lora + 2 * m.q_lora * H * (m.qk_nope + m.qk_rope)
+    kv_down = 2 * D * (m.kv_lora + m.qk_rope)
+    out = 2 * H * m.v_dim * D
+    if decode:  # absorbed: score/value live in latent space
+        absorb = 2 * H * m.qk_nope * m.kv_lora + 2 * H * m.v_dim * m.kv_lora
+        scores = 2 * H * (m.kv_lora + m.qk_rope) * ctx + 2 * H * m.kv_lora * ctx
+        return q + kv_down + absorb + scores + out
+    k_up = 2 * m.kv_lora * H * m.qk_nope + 2 * m.kv_lora * H * m.v_dim
+    scores = 2 * 2 * H * (m.qk_nope + m.qk_rope) * ctx
+    return q + kv_down + k_up + scores + out
+
+
+def _moe_flops_per_tok(cfg: ModelConfig, seq: int, dispatch: str | None = None) -> float:
+    m = cfg.moe
+    D, E, K, Fe = cfg.d_model, m.n_experts, m.top_k, m.d_ff_expert
+    if dispatch is None:
+        dispatch = m.dispatch
+    router = 2 * D * E
+    expert = 3 * 2 * D * Fe * K * m.capacity_factor  # capacity padding included
+    shared = 3 * 2 * D * (m.n_shared * Fe) if m.n_shared else 0
+    disp = 0.0
+    if dispatch == "einsum":
+        C = max(1, math.ceil(seq * K / E * m.capacity_factor))
+        # dispatch + combine einsums, K slots each: 2*S*E*C*D per slot per seq
+        disp = 2 * (K * 2 * E * C * D)
+    return router + expert + shared + disp
+
+
+def _mlp_flops_per_tok(cfg: ModelConfig) -> float:
+    n_mat = 2 if cfg.family == "audio" else 3
+    return n_mat * 2 * cfg.d_model * cfg.d_ff
+
+
+def _mlstm_flops_per_tok(cfg: ModelConfig, chunk: int = 128) -> float:
+    di = int(cfg.ssm.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dk = di // H
+    proj = 2 * cfg.d_model * 2 * di + 3 * 2 * di * di + 2 * di * 2 * H + 2 * di * cfg.d_model
+    scan = H * (2 * chunk * (dk + dk) + 4 * dk * (dk + 1))
+    return proj + scan
+
+
+def _slstm_flops_per_tok(cfg: ModelConfig) -> float:
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    rec = 2 * H * dh * 4 * dh
+    ffd = max(1, int(4 / 3 * D))
+    return 2 * D * 4 * D + rec + 2 * 2 * D * ffd
+
+
+def _ssd_flops_per_tok(cfg: ModelConfig, chunk: int = 128) -> float:
+    s = cfg.ssm
+    H = s.n_ssm_heads
+    hd = cfg.d_model // H
+    N = s.state_size
+    proj = 2 * cfg.d_model * (H * (hd + 2 * N + 1) + H * hd) + 2 * cfg.d_model**2
+    scan = H * (2 * chunk * (N + hd) + 4 * N * (hd + 1))
+    return proj + scan
+
+
+def layer_flops_per_tok(cfg: ModelConfig, ctx: float, seq: int,
+                        decode: bool = False) -> float:
+    """Mean per-token FLOPs across one *scan group*, divided by group size."""
+    fam = cfg.family
+    if fam in ("dense", "audio"):
+        return _attn_flops_per_tok(cfg, ctx) + _mlp_flops_per_tok(cfg)
+    if fam == "moe":
+        mixer = (
+            _mla_flops_per_tok(cfg, ctx, decode)
+            if cfg.mla
+            else _attn_flops_per_tok(cfg, ctx)
+        )
+        k = cfg.moe.every_k
+        per_group = (k - 1) * (mixer + _mlp_flops_per_tok(cfg)) + (
+            mixer + _moe_flops_per_tok(cfg, seq)
+        )
+        return per_group / k
+    if fam == "vlm":
+        ce = cfg.vlm.cross_every
+        self_l = _attn_flops_per_tok(cfg, ctx) + _mlp_flops_per_tok(cfg)
+        cross = _attn_flops_per_tok(cfg, cfg.vlm.n_vision_tokens) + _mlp_flops_per_tok(cfg)
+        return ((ce - 1) * self_l + cross) / ce
+    if fam == "ssm":
+        k = cfg.ssm.slstm_every
+        return ((k - 1) * _mlstm_flops_per_tok(cfg) + _slstm_flops_per_tok(cfg)) / k
+    if fam == "hybrid":
+        w = cfg.sliding_window or ctx
+        attn = _attn_flops_per_tok(cfg, min(ctx, w))
+        ssd = _ssd_flops_per_tok(cfg)
+        return attn + ssd + _mlp_flops_per_tok(cfg)
+    raise ValueError(fam)
+
+
+@dataclass
+class CellCost:
+    flops_global: float  # true executed FLOPs for one step (all chips)
+    hbm_bytes_per_chip: float
+    flops_components: dict
+    bytes_components: dict
+
+
+def cell_cost(cfg: ModelConfig, kind: str, batch: int, seq: int, chips: int,
+              microbatches: int = 1, data_degree: int = 16,
+              state_dtype_bytes: int = 4) -> CellCost:
+    """Analytic cost of one step of a dry-run cell."""
+    Vp = lm.padded_vocab(cfg)
+    D, L = cfg.d_model, cfg.n_layers
+    pbytes_total = lm.count_params(cfg) * cfg.pdtype.itemsize
+    act_bytes = 2  # bf16 activations
+
+    if kind == "train":
+        tokens = batch * seq
+        ctx = seq / 2
+        lyr = layer_flops_per_tok(cfg, ctx, seq) * L * tokens * 4  # fwd+2bwd+remat
+        head = 2 * D * Vp * tokens * 3
+        flops = lyr + head
+        fcomp = dict(layers=lyr, head=head)
+
+        b_loc = max(batch // data_degree, 1)
+        # params: fwd read + remat read + bwd read + grad write + opt update rw
+        p_io = pbytes_total / chips * (3 + 1) + (
+            lm.count_params(cfg) / chips
+        ) * state_dtype_bytes * 4
+        # activation boundaries: write fwd + read bwd, per microbatch slice
+        bound = 2 * (b_loc / microbatches) * seq * D * L * act_bytes * microbatches
+        # per-layer working set r/w (approx 8 tensors of [b,s,D])
+        work = 8 * (b_loc / microbatches) * seq * D * act_bytes * microbatches
+        logits_io = 3 * (b_loc * seq * Vp / max(1, chips // data_degree)) * 4
+        hbm = p_io + bound + work + logits_io
+        bcomp = dict(params=p_io, boundaries=bound, work=work, logits=logits_io)
+        return CellCost(flops, hbm, fcomp, bcomp)
+
+    if kind == "prefill":
+        tokens = batch * seq
+        ctx = seq / 2
+        flops = layer_flops_per_tok(cfg, ctx, seq) * L * tokens + 2 * D * Vp * tokens
+        b_loc = max(batch // data_degree, 1)
+        hbm = pbytes_total / chips + 4 * b_loc * seq * D * L / cfg.n_layers * act_bytes
+        return CellCost(flops, hbm, dict(layers=flops), dict(params=pbytes_total / chips))
+
+    # decode: one token per slot against ctx-long state
+    tokens = batch
+    ctx = seq
+    flops = (
+        layer_flops_per_tok(cfg, ctx, seq, decode=True) * L * tokens
+        + 2 * D * Vp * tokens
+    )
+    # bytes: every param read once + cache read (the decode roofline)
+    cache_bytes = _cache_bytes(cfg, batch, seq)
+    hbm = pbytes_total / chips + cache_bytes / chips
+    return CellCost(
+        flops, hbm, dict(layers=flops),
+        dict(params=pbytes_total / chips, cache=cache_bytes / chips),
+    )
+
+
+def analytic_memory_gib(cfg: ModelConfig, kind: str, batch: int, seq: int,
+                        chips: int, microbatches: int = 1, data_degree: int = 16,
+                        state_dtype_bytes: int = 4, seq_shard: int = 1) -> dict:
+    """Per-chip HBM estimate for the *TPU target* (bf16 stays bf16).
+
+    XLA:CPU's memory_analysis widens bf16 buffers to f32 (verified with a
+    pure-bf16 scan micro-benchmark: 64.5 MiB vs the exact 31.5 MiB), so the
+    CPU-compiled peak overstates bf16-heavy cells by up to ~2x.  We report
+    both; the fits-in-HBM criterion uses this estimate.
+    """
+    from ..models import lm as _lm
+
+    n = _lm.count_params(cfg)
+    Vp = _lm.padded_vocab(cfg)
+    pb = cfg.pdtype.itemsize
+    out: dict[str, float] = {}
+    out["params"] = n * pb / chips
+    if kind == "train":
+        b_loc = max(batch // data_degree, 1)
+        out["grads"] = n * pb / chips
+        out["opt_state"] = n * 2 * state_dtype_bytes / chips
+        out["boundaries"] = (
+            (b_loc / microbatches) * seq * cfg.d_model * cfg.n_layers * 2 / seq_shard
+        )
+        out["working_set"] = 10 * (b_loc / microbatches) * seq * cfg.d_model * 2 / seq_shard
+        v_shard = max(chips // data_degree, 1)
+        # bf16 logits for the local microbatch + chunked-CE f32 transients
+        out["logits"] = (
+            b_loc * seq * Vp / v_shard * 2 / microbatches
+            + 2 * b_loc * min(seq, 512) * Vp / v_shard * 4
+        )
+    elif kind == "prefill":
+        b_loc = max(batch // data_degree, 1)
+        out["working_set"] = 12 * b_loc * seq * cfg.d_model * 2 / seq_shard
+        out["cache"] = _cache_bytes(cfg, batch, seq) / chips
+    else:
+        out["cache"] = _cache_bytes(cfg, batch, seq) / chips
+        out["working_set"] = 4 * max(batch // data_degree, 1) * cfg.d_model * 2 * cfg.n_layers
+    total = sum(out.values())
+    return {"total_gib": total / 2**30, **{k: v / 2**30 for k, v in out.items()}}
+
+
+def _cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> float:
+    if cfg.family == "ssm":
+        di = int(cfg.ssm.proj_factor * cfg.d_model)
+        dk = di // cfg.n_heads
+        per = cfg.n_heads * dk * (dk + 1) * 4
+        return batch * per * cfg.n_layers
+    if cfg.family == "hybrid":
+        W = cfg.sliding_window or seq
+        attn = batch * W * cfg.n_kv_heads * cfg.hd * 2 * 2
+        H = cfg.ssm.n_ssm_heads
+        hd = cfg.d_model // H
+        ssd = batch * H * cfg.ssm.state_size * (hd + 1) * 4
+        return (attn + ssd) * cfg.n_layers
+    if cfg.mla:
+        m = cfg.mla
+        return batch * seq * (m.kv_lora + m.qk_rope) * 2 * cfg.n_layers
+    return batch * seq * cfg.n_kv_heads * cfg.hd * 2 * 2 * cfg.n_layers

@@ -1,0 +1,89 @@
+"""Per-architecture parallelism policy: how the fixed production mesh
+(16 data x 16 model [x 2 pod]) is *used* by each model.
+
+The mesh shape is fixed by the cluster; the sharding policy is not.  A 1.2B
+model tensor-parallelized 16 ways is collective-bound (Megatron-style TP
+moves ~8 x [B,S,D] activation all-reduces per layer while per-chip compute
+shrinks 16x) — measured in the §Perf log.  Policy:
+
+* ``tp``      — small dense/recurrent models (<~3B) run **pure DP**: batch
+  over both mesh axes, weights FSDP-sharded over both (so the 'model' axis
+  is a second data axis).  Large models keep 16-way TP.  MoE models always
+  use the model axis for expert parallelism.
+* ``fsdp``    — which axes weights are sharded over.  Never the pod axis
+  (param all-gathers must not cross DCN).
+* batch axes for serving are chosen per shape so the global batch divides
+  the axis product (bs=1 long-context decode simply cannot use batch
+  parallelism — the data axes idle and the model axes do the work).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..models.config import ModelConfig
+from ..models.layers import Axes
+
+# archs that keep 16-way tensor/expert parallelism for TRAINING: only where
+# weights/optimizer cannot live replicated-over-model (>=90B or EP).  The
+# §Perf log records the measurement behind this: yi-6b trained at TP16 is
+# 3.4s/step collective-bound (Megatron activation all-reduces); pure
+# DP+FSDP over both axes brings the collective term under the compute term.
+TP_TRAIN = {
+    "llama-3.2-vision-90b",
+    "deepseek-v2-236b",
+    "llama4-maverick-400b-a17b",
+}
+
+
+@dataclass(frozen=True)
+class Parallelism:
+    data: tuple  # batch axes
+    model: str | None  # TP/EP axis (None = pure DP)
+    fsdp: tuple  # weight-sharding axes
+    seq: str | None = None  # sequence-parallel axis for residual activations
+
+
+def plan(cfg: ModelConfig, mesh, multi_pod: bool, kind: str = "train",
+         global_batch: int | None = None) -> Parallelism:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if kind == "train":
+        tp = cfg.name in TP_TRAIN
+    else:
+        # serving: every full-KV-cache family must shard its cache over the
+        # model axis (heads or sequence) — 32k x big-batch caches do not fit
+        # sharded over the data axis alone
+        tp = cfg.family in ("dense", "moe", "vlm")
+    pod = ("pod",) if multi_pod else ()
+
+    if tp:
+        data = pod + ("data",)
+        model = "model"
+        fsdp = ("data",)
+        seq = "model" if kind == "train" else None  # Megatron-SP carries
+    else:
+        data = pod + ("data", "model")
+        model = None
+        fsdp = ("data", "model")
+        seq = None
+
+    if global_batch is not None:
+        # shrink batch axes (drop rightmost) until the product divides B
+        while data and global_batch % _prod(sizes, data) != 0:
+            data = data[:-1]
+    return Parallelism(data=data, model=model, fsdp=fsdp, seq=seq)
+
+
+def _prod(sizes: dict, axes: tuple) -> int:
+    out = 1
+    for a in axes:
+        out *= sizes[a]
+    return out
+
+
+def axes_for(cfg: ModelConfig, mesh, multi_pod: bool, kind: str = "train",
+             global_batch: int | None = None) -> Axes:
+    p = plan(cfg, mesh, multi_pod, kind, global_batch)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return Axes(data=p.data, model=p.model, fsdp=p.fsdp, enabled=True, sizes=sizes,
+                seq=p.seq)

@@ -1,0 +1,52 @@
+"""Serving launcher (reduced configs on the host; full configs via dryrun).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
+        --requests 16 --batch 4 --prompt-len 32 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .. import configs
+from ..models import lm
+from ..serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+    params = lm.init_params(cfg, jax.random.key(0))
+    eng = ServeEngine(cfg, params, batch=args.batch, max_len=args.prompt_len + args.max_new)
+
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(0, cfg.vocab_size, args.prompt_len))
+
+    done, t0 = 0, time.perf_counter()
+    while eng._queue:
+        out = eng.run_wave(max_new=args.max_new)
+        done += len(out)
+        print(f"wave done: {len(out)} requests, sample output: {out[0][:8]}")
+    dt = time.perf_counter() - t0
+    toks = done * args.max_new
+    print(f"served {done} requests / {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s greedy, reduced config on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+        --steps 50 --batch 8 --seq 128 --mode fmi --allreduce ring
+
+Full-size archs on the production mesh are exercised via dryrun.py (this
+container has one real device); ``--reduced`` trains the smoke-sized config
+of the same family for real.  Supports both distribution modes, gradient
+compression, ZeRO-1, checkpoint/restart (``--ckpt-dir``), and resumes
+automatically from the latest committed checkpoint.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from .. import configs
+from ..checkpoint import CheckpointManager
+from ..data.pipeline import DataConfig, synthetic_batch
+from ..models import lm
+from ..optim.optimizer import OptConfig
+from ..training.train_step import TrainConfig, init_opt_state, make_train_step, place_state
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mode", default="xla", choices=["xla", "fmi"])
+    ap.add_argument("--allreduce", default="auto")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--compression", default="none", choices=["none", "int8"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data-axis", type=int, default=1)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--out-json", default="")
+    args = ap.parse_args()
+
+    cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
+    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    tcfg = TrainConfig(
+        mode=args.mode,
+        microbatches=args.microbatches,
+        optimizer=OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=min(20, args.steps // 5 + 1)),
+        allreduce=args.allreduce,
+        zero1=args.zero1,
+        compression=args.compression,
+    )
+    step_fn, ax, pspecs = make_train_step(cfg, tcfg, mesh, multi_pod=False)
+    dcfg = DataConfig()
+
+    with jax.set_mesh(mesh):
+        params = lm.init_params(cfg, jax.random.key(0))
+        if args.zero1 and args.mode == "fmi":
+            from ..core.communicator import Communicator
+            from ..training import zero1 as z1
+
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            comm = Communicator(axes=ax.data, sizes=tuple(sizes[a] for a in ax.data))
+            layout = z1.make_layout(params, comm.size)
+            opt_state = z1.zero1_init(params, layout, comm, tcfg.optimizer.state_dtype)
+        else:
+            opt_state = init_opt_state(cfg, tcfg, params)
+        if not args.zero1:
+            params, opt_state = place_state(mesh, params, opt_state, pspecs, tcfg)
+
+        start = 0
+        ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+        if ckpt is not None:
+            try:
+                state, start = ckpt.restore_latest({"params": params, "opt": opt_state})
+                params, opt_state = state["params"], state["opt"]
+                print(f"resumed from step {start}")
+            except FileNotFoundError:
+                pass
+
+        history = []
+        t_start = time.perf_counter()
+        for step in range(start, start + args.steps):
+            batch = jax.tree.map(
+                jax.numpy.asarray,
+                synthetic_batch(dcfg, cfg, args.batch, args.seq, step),
+            )
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, "time_s": dt, **m})
+            if step % args.log_every == 0 or step == start + args.steps - 1:
+                print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                      f"lr {m['lr']:.2e} gnorm {m.get('grad_norm', 0):.2f} {dt*1e3:.0f}ms")
+            if ckpt is not None and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async({"params": params, "opt": opt_state}, step + 1)
+        if ckpt is not None:
+            ckpt.wait()
+
+    total = time.perf_counter() - t_start
+    first, last = history[0]["ce"], history[-1]["ce"]
+    print(f"done: {args.steps} steps in {total:.1f}s; ce {first:.3f} -> {last:.3f}")
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(history, f)
+
+
+if __name__ == "__main__":
+    main()

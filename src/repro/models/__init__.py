@@ -1,0 +1,11 @@
+"""Model zoo: unified block machinery covering all ten assigned archs."""
+
+from . import attention, lm, mla, moe, ssm
+from .config import MLACfg, MoECfg, ModelConfig, SSMCfg, VLMCfg
+from .layers import NO_SHARD, Axes
+
+__all__ = [
+    "ModelConfig", "MoECfg", "MLACfg", "SSMCfg", "VLMCfg",
+    "Axes", "NO_SHARD",
+    "lm", "attention", "moe", "mla", "ssm",
+]

@@ -1,0 +1,136 @@
+"""Primitive layers: init helpers, RMSNorm, RoPE, sharding constraints."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Mesh-axis context: which mesh axes mean "batch" and "model"
+# ---------------------------------------------------------------------------
+
+
+class Axes:
+    """Named-axis context threaded through the model for sharding constraints.
+
+    ``data``: tuple of mesh axes the batch is sharded over (('data',) on one
+    pod, ('pod','data') across pods).  ``model``: the tensor-parallel axis.
+    ``fsdp``: axis weights are additionally sharded over (ZeRO-3-style);
+    usually the in-pod 'data' axis — never the cross-pod axis (DCN).
+    """
+
+    def __init__(self, data=("data",), model="model", fsdp="data", enabled=True,
+                 sizes: dict | None = None, seq=None):
+        self.data = tuple(data)
+        self.model = model  # TP axis name, or None (pure-DP policy)
+        self.fsdp = (
+            tuple(fsdp) if isinstance(fsdp, (tuple, list)) else ((fsdp,) if fsdp else ())
+        )
+        self.enabled = enabled
+        self.sizes = sizes or {}
+        # Megatron-style sequence parallelism: residual-stream activations
+        # (and therefore remat carries) sharded seq-over-model between blocks
+        self.seq = seq
+
+    def axsize(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, (tuple, list)):
+            out = 1
+            for a in axis:
+                out *= self.sizes.get(a, 1)
+            return out
+        return self.sizes.get(axis, 1)
+
+    def divides(self, dim: int, axis) -> bool:
+        return dim % self.axsize(axis) == 0
+
+    def constrain(self, x, spec: P):
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    # common activation constraints
+    def act_btd(self, x):  # [B, T, D]
+        s = self.seq if self.seq and self.divides(x.shape[1], self.seq) else None
+        return self.constrain(x, P(self.data, s, None))
+
+    def act_bthd(self, x):  # [B, T, H, hd] — heads tensor-parallel
+        m = self.model if self.model and self.divides(x.shape[2], self.model) else None
+        return self.constrain(x, P(self.data, None, m, None))
+
+    def act_btf(self, x):  # [B, T, F] — mlp hidden tensor-parallel
+        m = self.model if self.model and self.divides(x.shape[-1], self.model) else None
+        return self.constrain(x, P(self.data, None, m))
+
+    def act_btv(self, x):  # [B, T, V] — vocab tensor-parallel
+        m = self.model if self.model and self.divides(x.shape[-1], self.model) else None
+        return self.constrain(x, P(self.data, None, m))
+
+
+NO_SHARD = Axes(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape: Sequence[int], dtype, fan_in: int | None = None):
+    """Truncated-normal with 1/sqrt(fan_in) scaling (last-but-one dim)."""
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = fan**-0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(
+        dtype
+    )
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * 0.02).astype(
+        dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(gate, up):
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (rotate-half convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(hd: int, theta: float):
+    return theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, T, H, hd]; positions: [T] or [B, T] absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, hd/2]
+        ang = ang[None, :, None, :]  # [1, T, 1, hd/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, hd/2]
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

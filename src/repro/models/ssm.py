@@ -1,0 +1,307 @@
+"""Recurrent mixers: xLSTM (mLSTM + sLSTM) and SSD heads (hymba).
+
+All O(T) in sequence length with O(1) decode state — these are the archs
+that run the 500k-token decode cell.
+
+* **mLSTM** (matrix memory): chunk-parallel via the GLA Pallas kernel
+  (repro.kernels.ssm_scan); decode is a 3-op recurrent update.
+  Deviation from the paper recorded in DESIGN.md: the running-max
+  stabilizer m_t is replaced by clipping the exponential input gate
+  pre-activation (chunked-matmul-friendly) + the max(|q·n|,1) normalizer.
+* **sLSTM** (scalar memory, recurrent R): inherently sequential —
+  implemented as a lax.scan over time with exponential-gating
+  stabilization.  xlstm-125m places one sLSTM block every
+  ``ssm.slstm_every`` blocks.
+* **SSD** (mamba-2-style scalar-decay state space): hymba's second head
+  set, running in parallel with sliding-window attention.  Deviation:
+  hymba's mamba-1 heads are expressed in the SSD (scalar per-head decay)
+  form — TPU-native chunked matmuls instead of a per-channel selective
+  scan.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import Axes, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# causal conv1d (shared helper; kernel k, per-channel)
+# ---------------------------------------------------------------------------
+
+
+def conv1d_init(key, channels: int, k: int, dtype):
+    return {"w": dense_init(key, (k, channels), dtype, fan_in=k)}
+
+
+def conv1d_apply(p, x, state=None):
+    """x: [B, T, C] causal depthwise conv.  state: [B, k-1, C] carry for
+    decode.  Returns (y, new_state)."""
+    w = p["w"].astype(x.dtype)  # [k, C]
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    new_state = xp[:, -(k - 1) :, :] if k > 1 else None
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    s = cfg.ssm
+    di = int(s.proj_factor * D)
+    H = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((D,), cfg.pdtype),
+        "up": dense_init(ks[0], (D, 2 * di), cfg.pdtype),
+        "conv": conv1d_init(ks[1], di, s.conv_kernel, cfg.pdtype),
+        "wq": dense_init(ks[2], (di, di), cfg.pdtype),
+        "wk": dense_init(ks[3], (di, di), cfg.pdtype),
+        "wv": dense_init(ks[4], (di, di), cfg.pdtype),
+        "wif": dense_init(ks[5], (di, 2 * H), cfg.pdtype),
+        "out_norm": jnp.ones((di,), cfg.pdtype),
+        "down": dense_init(ks[6], (di, D), cfg.pdtype),
+    }
+
+
+def _mlstm_gates(pre, H):
+    """pre: [B, T, 2H] -> (log_f [B,H,T], i [B,H,T]) stabilized."""
+    f_pre, i_pre = pre[..., :H], pre[..., H:]
+    log_f = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    i_gate = jnp.exp(jnp.clip(i_pre.astype(jnp.float32), -10.0, 2.0))
+    return jnp.moveaxis(log_f, -1, 1), jnp.moveaxis(i_gate, -1, 1)
+
+
+def mlstm_apply(p, x, cfg: ModelConfig, ax: Axes, state=None, backend="auto"):
+    """x: [B, T, D].  state (decode): dict(C [B,H,dk,dv+1], conv [B,k-1,di]).
+    Returns (out, new_state)."""
+    s = cfg.ssm
+    B, T, D = x.shape
+    H = cfg.n_heads
+    di = int(s.proj_factor * D)
+    dk = di // H
+    dt = cfg.adtype
+
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = h @ p["up"].astype(dt)
+    xm, z = up[..., :di], up[..., di:]
+    conv_state = None if state is None else state.get("conv")
+    xc, new_conv = conv1d_apply(p["conv"], xm, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(dt)
+
+    def heads(y):
+        return jnp.moveaxis(y.reshape(B, T, H, dk), 2, 1)  # [B, H, T, dk]
+
+    q = heads(xc @ p["wq"].astype(dt))
+    k = heads(xc @ p["wk"].astype(dt))
+    v = heads(xm @ p["wv"].astype(dt))
+    log_f, i_gate = _mlstm_gates(xm @ p["wif"].astype(dt), H)
+
+    if state is None or T > 1:
+        out, C = ops.gla_scan(q, k, v, log_f, i_gate, normalize=True, backend=backend)
+        new_C = C
+    else:
+        # recurrent single-step decode
+        C = state["C"]  # [B, H, dk, dv+1] f32
+        qf = q[:, :, 0].astype(jnp.float32) * (dk**-0.5)
+        kf = k[:, :, 0].astype(jnp.float32)
+        vf = v[:, :, 0].astype(jnp.float32)
+        ff = jnp.exp(log_f[:, :, 0])[..., None, None]
+        ii = i_gate[:, :, 0][..., None, None]
+        v_aug = jnp.concatenate([vf, jnp.ones_like(vf[..., :1])], -1)
+        new_C = ff * C + ii * (kf[..., :, None] * v_aug[..., None, :])
+        num = jnp.einsum("bhk,bhkv->bhv", qf, new_C)
+        den = jnp.maximum(jnp.abs(num[..., -1:]), 1.0)
+        out = (num[..., :-1] / den)[:, :, None, :].astype(dt)  # [B,H,1,dv]
+
+    out = jnp.moveaxis(out, 1, 2).reshape(B, T, di)
+    out = rmsnorm(out, p["out_norm"], cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(dt)
+    y = out @ p["down"].astype(dt)
+    new_state = {"C": new_C, "conv": new_conv}
+    return ax.act_btd(x + y), new_state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = int(s.proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dk = di // H
+    return {
+        "C": jnp.zeros((batch, H, dk, dk + 1), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, di), cfg.adtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (xLSTM) — sequential lax.scan
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 4)
+    ffd = max(1, int(4 / 3 * D))
+    return {
+        "norm": jnp.ones((D,), cfg.pdtype),
+        "wx": dense_init(ks[0], (D, 4 * D), cfg.pdtype),  # i,f,z,o pre-acts
+        "r": dense_init(ks[1], (H, dh, 4 * dh), cfg.pdtype, fan_in=dh),
+        "ffn_up": dense_init(ks[2], (D, ffd), cfg.pdtype),
+        "ffn_down": dense_init(ks[3], (ffd, D), cfg.pdtype),
+        "ffn_norm": jnp.ones((D,), cfg.pdtype),
+    }
+
+
+def slstm_step(p, cfg: ModelConfig, carry, wx_t):
+    """carry: (h [B,D], c, n, m); wx_t: [B, 4D] input pre-activations."""
+    H = cfg.n_heads
+    D = cfg.d_model
+    dh = D // H
+    h, c, n, m = carry
+    rh = jnp.einsum("bhd,hde->bhe", h.reshape(-1, H, dh), p["r"].astype(h.dtype))
+    pre = (wx_t.reshape(-1, H, 4 * dh) + rh).astype(jnp.float32)
+    i_p, f_p, z_p, o_p = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_p + m, i_p)  # per-unit stabilizer
+    i = jnp.exp(i_p - m_new)
+    f = jnp.exp(f_p + m - m_new)
+    c = f * c + i * jnp.tanh(z_p)
+    n = f * n + i
+    h_new = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1.0)
+    return (h_new.reshape(-1, D).astype(h.dtype), c, n, m_new)
+
+
+def slstm_apply(p, x, cfg: ModelConfig, ax: Axes, state=None):
+    """x: [B, T, D]; sequential over T.  state: (h, c, n, m) for decode."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    dt = cfg.adtype
+    h0 = rmsnorm(x, p["norm"], cfg.norm_eps)
+    wx = h0 @ p["wx"].astype(dt)  # [B, T, 4D]
+    if state is None:
+        state = (
+            jnp.zeros((B, D), dt),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H, dh), -1e30, jnp.float32),
+        )
+
+    def step(carry, wx_t):
+        new = slstm_step(p, cfg, carry, wx_t)
+        return new, new[0]
+
+    new_state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)  # [B, T, D]
+    x = x + y
+    # post-FFN (proj factor 4/3, gelu)
+    f = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+    f = jax.nn.gelu((f @ p["ffn_up"].astype(dt)).astype(jnp.float32)).astype(dt)
+    x = x + f @ p["ffn_down"].astype(dt)
+    return ax.act_btd(x), new_state
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int):
+    D, H = cfg.d_model, cfg.n_heads
+    dh = D // H
+    return (
+        jnp.zeros((batch, D), cfg.adtype),
+        jnp.zeros((batch, H, dh), jnp.float32),
+        jnp.zeros((batch, H, dh), jnp.float32),
+        jnp.full((batch, H, dh), -1e30, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# SSD heads (hymba): mamba-2-style scalar-decay state space
+# ---------------------------------------------------------------------------
+
+
+def ssd_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    s = cfg.ssm
+    H = s.n_ssm_heads
+    hd = D // H
+    N = s.state_size
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (D, H * (hd + 2 * N + 1) + H * hd), cfg.pdtype),
+        "conv": conv1d_init(ks[1], H * (hd + 2 * N), s.conv_kernel, cfg.pdtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.ones((H * hd,), cfg.pdtype),
+    }
+
+
+def ssd_apply(p, x, cfg: ModelConfig, ax: Axes, state=None, backend="auto"):
+    """Returns (y [B, T, H*hd], new_state {C, conv})."""
+    s = cfg.ssm
+    B, T, D = x.shape
+    H = s.n_ssm_heads
+    hd = D // H
+    N = s.state_size
+    dt_ = cfg.adtype
+
+    proj = x @ p["in_proj"].astype(dt_)
+    core, z, dt_pre = (
+        proj[..., : H * (hd + 2 * N)],
+        proj[..., H * (hd + 2 * N) : H * (hd + 2 * N) + H * hd],
+        proj[..., -H:],
+    )
+    conv_state = None if state is None else state.get("conv")
+    core, new_conv = conv1d_apply(p["conv"], core, conv_state)
+    core = jax.nn.silu(core.astype(jnp.float32)).astype(dt_)
+    core = core.reshape(B, T, H, hd + 2 * N)
+    v = jnp.moveaxis(core[..., :hd], 2, 1)  # [B, H, T, hd]
+    k = jnp.moveaxis(core[..., hd : hd + N], 2, 1)  # B_ssm
+    q = jnp.moveaxis(core[..., hd + N :], 2, 1)  # C_ssm
+
+    delta = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+    delta = jnp.moveaxis(delta, -1, 1)  # [B, H, T]
+    A = jnp.exp(p["A_log"])[None, :, None]  # [1, H, 1] > 0
+    log_f = -delta * A
+    i_gate = delta
+
+    if state is None or T > 1:
+        out, C = ops.gla_scan(q, k, v, log_f, i_gate, normalize=False, backend=backend)
+        new_C = C
+    else:
+        C = state["C"]  # [B, H, N, hd+1]
+        qf = q[:, :, 0].astype(jnp.float32) * (N**-0.5)
+        kf = k[:, :, 0].astype(jnp.float32)
+        vf = v[:, :, 0].astype(jnp.float32)
+        v_aug = jnp.concatenate([vf, jnp.ones_like(vf[..., :1])], -1)
+        ff = jnp.exp(log_f[:, :, 0])[..., None, None]
+        ii = i_gate[:, :, 0][..., None, None]
+        new_C = ff * C + ii * (kf[..., :, None] * v_aug[..., None, :])
+        out = jnp.einsum("bhk,bhkv->bhv", qf, new_C)[..., :-1][:, :, None, :].astype(dt_)
+
+    out = out + p["D_skip"].astype(dt_)[None, :, None, None] * v
+    y = jnp.moveaxis(out, 1, 2).reshape(B, T, H * hd)
+    y = rmsnorm(y, p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_)
+    return y, {"C": new_C, "conv": new_conv}
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    H = s.n_ssm_heads
+    hd = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, s.state_size, hd + 1), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, H * (hd + 2 * s.state_size)), cfg.adtype),
+    }

@@ -1,0 +1,3 @@
+from .optimizer import OptConfig, adamw_init, adamw_update, clip_by_global_norm, lr_at
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "clip_by_global_norm", "lr_at"]

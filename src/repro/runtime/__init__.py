@@ -1,0 +1,5 @@
+from .elastic import ElasticController
+from .membership import GroupError, Membership
+from .straggler import StragglerPolicy
+
+__all__ = ["Membership", "GroupError", "ElasticController", "StragglerPolicy"]

@@ -1,0 +1,60 @@
+"""Elastic rescale: rebuild the communicator from survivors and resume.
+
+Flow (driven by the trainer when ``Membership.check_alive`` raises):
+
+    1. survivors = membership.survivors()
+    2. new data-parallel degree = largest power of two <= len(survivors)
+       (keeps every collective algorithm's fast path; spare survivors idle
+       until the next rescale up)
+    3. rebuild mesh/communicators at the new size
+    4. restore the latest committed checkpoint with the new shardings
+       (checkpoint/store.py re-device_puts every leaf -> resharding is free)
+    5. data pipeline resumes at the restored step (stateless addressing)
+
+The controller is pure policy — mesh/step rebuilding is delegated to
+callbacks so it is unit-testable without devices and reusable by both the
+train driver and the tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .membership import GroupError, Membership
+
+
+def pow2_floor(n: int) -> int:
+    return 1 << (n.bit_length() - 1) if n > 0 else 0
+
+
+@dataclass
+class ElasticController:
+    membership: Membership
+    rebuild: Callable[[int], None]  # new_dp_degree -> rebuild mesh/step fns
+    restore: Callable[[], int]  # reload ckpt onto new mesh; returns step
+    min_degree: int = 1
+    history: list = field(default_factory=list)
+
+    def heal(self) -> int:
+        """Handle a failure: shrink to survivors, restore, return resume step."""
+        survivors = self.membership.survivors()
+        new_dp = pow2_floor(len(survivors))
+        if new_dp < self.min_degree:
+            raise GroupError(
+                f"only {len(survivors)} survivors; below min degree {self.min_degree}"
+            )
+        self.rebuild(new_dp)
+        step = self.restore()
+        self.history.append({"survivors": len(survivors), "dp": new_dp, "step": step})
+        return step
+
+    def step_or_heal(self, do_step: Callable[[], None]) -> bool:
+        """Run one step; on GroupError heal and report True (healed)."""
+        try:
+            self.membership.check_alive()
+            do_step()
+            return False
+        except GroupError:
+            self.heal()
+            return True

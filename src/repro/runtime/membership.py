@@ -1,0 +1,88 @@
+"""Communicator group membership with timeouts (paper §3.1, verbatim policy).
+
+    "A timer is started as soon as the first function joins the group
+     communicator.  If all functions scheduled to join do not do so before
+     the timer expires, then all functions exit with an error."
+
+On the TPU cluster the same policy governs job formation (all hosts must
+report before ``form_timeout``) and failure detection (a rank whose
+heartbeat is older than ``heartbeat_timeout`` is declared dead, and the
+communicator errors out — the elastic controller then rebuilds a smaller
+group; see elastic.py).  The clock is injectable so the policy is
+deterministic under test.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+
+class GroupError(RuntimeError):
+    """A communicator failed to form or lost a member (paper semantics:
+    the entire communicator exits with an error)."""
+
+
+@dataclass
+class Membership:
+    expected: int
+    form_timeout: float = 30.0
+    heartbeat_timeout: float = 10.0
+    clock: callable = time.monotonic
+
+    _joined: dict[int, float] = field(default_factory=dict)
+    _first_join: float | None = None
+    _formed: bool = False
+
+    def join(self, rank: int):
+        now = self.clock()
+        if self._first_join is None:
+            self._first_join = now
+        if now - self._first_join > self.form_timeout and not self._formed:
+            raise GroupError(
+                f"group formation timed out after {self.form_timeout}s "
+                f"({len(self._joined)}/{self.expected} joined)"
+            )
+        if not 0 <= rank < self.expected:
+            raise GroupError(f"rank {rank} outside [0, {self.expected})")
+        self._joined[rank] = now
+        if len(self._joined) == self.expected:
+            self._formed = True
+
+    @property
+    def formed(self) -> bool:
+        return self._formed
+
+    def check_formed(self):
+        """Raise if the formation window has closed without a full group."""
+        if self._formed:
+            return
+        if self._first_join is None:
+            return
+        if self.clock() - self._first_join > self.form_timeout:
+            raise GroupError(
+                f"group formation timed out "
+                f"({len(self._joined)}/{self.expected} joined)"
+            )
+
+    def heartbeat(self, rank: int):
+        if not self._formed:
+            raise GroupError("heartbeat before group formed")
+        self._joined[rank] = self.clock()
+
+    def dead_ranks(self) -> list[int]:
+        if not self._formed:
+            return []
+        now = self.clock()
+        return [
+            r for r, t in self._joined.items() if now - t > self.heartbeat_timeout
+        ]
+
+    def check_alive(self):
+        dead = self.dead_ranks()
+        if dead:
+            raise GroupError(f"ranks {dead} missed heartbeats; communicator aborts")
+
+    def survivors(self) -> list[int]:
+        dead = set(self.dead_ranks())
+        return [r for r in sorted(self._joined) if r not in dead]

@@ -1,0 +1,63 @@
+"""Straggler detection and mitigation.
+
+Detection: per-rank EMA of step wall-time; a rank is a straggler when its
+EMA exceeds ``threshold`` x the current median.
+
+Mitigations (both exposed to the trainer):
+
+* ``backup``   — speculative re-execution: the straggler's microbatch is
+  duplicated on its buddy rank (rank ^ 1); first result wins.  We model
+  the decision layer here (which rank backs up whom); the duplicated work
+  is issued by the driver.
+* ``subgroup`` — bounded-staleness collective (the paper's timeout
+  philosophy applied to allreduce): the gradient reduction proceeds over
+  the on-time subgroup only, rescaling by live/total, and stragglers'
+  contributions are dropped for that step.  ``subgroup_scale`` computes the
+  mask/rescale, and ``repro.core.collectives.allreduce_tree`` applies it by
+  zeroing the straggler's local contribution before the reduce.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class StragglerPolicy:
+    n_ranks: int
+    threshold: float = 2.0
+    ema: float = 0.7
+    min_samples: int = 3
+
+    _t: dict[int, float] = field(default_factory=dict)
+    _n: int = 0
+
+    def observe(self, rank: int, step_time: float):
+        prev = self._t.get(rank)
+        self._t[rank] = (
+            step_time if prev is None else self.ema * prev + (1 - self.ema) * step_time
+        )
+        self._n += 1
+
+    def stragglers(self) -> list[int]:
+        if self._n < self.min_samples * self.n_ranks:
+            return []
+        med = float(np.median(list(self._t.values())))
+        return [r for r, t in self._t.items() if t > self.threshold * med]
+
+    def buddy(self, rank: int) -> int:
+        """Backup worker for ``rank`` (its hypercube neighbour)."""
+        return rank ^ 1 if (rank ^ 1) < self.n_ranks else (rank - 1) % self.n_ranks
+
+    def backup_plan(self) -> dict[int, int]:
+        """straggler rank -> backup rank executing its microbatch."""
+        return {r: self.buddy(r) for r in self.stragglers()}
+
+    def subgroup_scale(self) -> tuple[np.ndarray, float]:
+        """(mask [n_ranks] of on-time ranks, rescale factor total/live)."""
+        lag = set(self.stragglers())
+        mask = np.array([0.0 if r in lag else 1.0 for r in range(self.n_ranks)])
+        live = mask.sum()
+        return mask, float(self.n_ranks / max(live, 1.0))

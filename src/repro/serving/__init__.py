@@ -1,0 +1,3 @@
+from .engine import ServeConfig, make_serve_fns, ServeEngine
+
+__all__ = ["ServeConfig", "make_serve_fns", "ServeEngine"]

@@ -1,0 +1,141 @@
+"""Serving: sharded prefill + decode steps and a batched request engine.
+
+``make_serve_fns`` builds the jitted, mesh-sharded ``prefill`` and
+``decode_step`` closures the dry-run lowers for the decode_32k / long_500k
+cells: the KV cache is sharded batch-over-data and kv-heads-over-model, the
+cache is donated every step (in-place update at scale), and the token path
+is the absorbed-MLA / ring-SWA / recurrent-state decode of each family.
+
+``ServeEngine`` is a wave-batched request loop (static batch slots, shared
+position counter): requests queue up, a wave prefills together, then decodes
+until every slot hits its stop length.  Continuous (per-slot-position)
+batching is documented as future work in DESIGN.md — rope and cache writes
+are already per-batch-row capable (``positions`` may be [B, T]).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models import lm
+from ..models.config import ModelConfig
+from ..models.layers import Axes
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch: int
+    max_len: int
+    donate_cache: bool = True
+
+
+def _axes_for(mesh, multi_pod: bool) -> Axes:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    data = ("pod", "data") if multi_pod else ("data",)
+    return Axes(data=data, model="model", fsdp="data", enabled=True, sizes=sizes)
+
+
+def make_serve_fns(cfg: ModelConfig, scfg: ServeConfig, mesh, multi_pod: bool = False):
+    """Returns (prefill_fn, decode_fn, ax, shardings dict)."""
+    from ..launch.policy import axes_for
+
+    ax = axes_for(cfg, mesh, multi_pod, "serve", global_batch=scfg.batch)
+    pspecs = lm.param_specs(cfg, ax, ax.sizes)
+    cspecs = lm.cache_specs(cfg, ax, batch=scfg.batch, max_len=scfg.max_len)
+    ns = lambda s: NamedSharding(mesh, s)  # noqa: E731
+
+    p_sh = jax.tree.map(ns, pspecs)
+    c_sh = jax.tree.map(ns, cspecs)
+    tok_sh = ns(P(ax.data, None))
+
+    def prefill_fn(params, batch, cache):
+        last, cache = lm.prefill(params, cfg, ax, batch, cache)
+        return last, cache
+
+    def encode_fn(params, batch):
+        # encoder-only archs (hubert): "prefill" is one cacheless forward
+        logits, _aux, _ = lm.forward(params, cfg, ax, batch)
+        return logits
+
+    def decode_fn(params, tokens, pos, cache):
+        return lm.decode_step(params, cfg, ax, tokens, pos, cache)
+
+    if cfg.family == "audio":
+        in_batch_sh = {
+            "features": ns(P(ax.data, None, None)),
+            "mask": tok_sh,
+        }
+    else:
+        in_batch_sh = {"tokens": tok_sh}
+    if cfg.family == "vlm":
+        in_batch_sh["vision"] = ns(P(ax.data, None, None))
+
+    if not cfg.supports_decode:
+        encode_jit = jax.jit(
+            encode_fn,
+            in_shardings=(p_sh, in_batch_sh),
+            out_shardings=ns(P(ax.data, None, None)),
+        )
+        return encode_jit, None, ax, {"params": p_sh, "cache": None}
+
+    prefill_jit = jax.jit(
+        prefill_fn,
+        in_shardings=(p_sh, in_batch_sh, c_sh),
+        out_shardings=(ns(P(ax.data, None)), c_sh),
+        donate_argnums=(2,) if scfg.donate_cache else (),
+    )
+    decode_jit = jax.jit(
+        decode_fn,
+        in_shardings=(p_sh, tok_sh, None, c_sh),
+        out_shardings=(tok_sh, c_sh),
+        donate_argnums=(3,) if scfg.donate_cache else (),
+    )
+    return prefill_jit, decode_jit, ax, {"params": p_sh, "cache": c_sh}
+
+
+class ServeEngine:
+    """Wave-batched greedy decoding over static slots (single-host driver)."""
+
+    def __init__(self, cfg: ModelConfig, params, mesh=None, batch: int = 8,
+                 max_len: int = 256):
+        from ..models.layers import NO_SHARD
+
+        self.cfg = cfg
+        self.params = params
+        self.ax = NO_SHARD if mesh is None else _axes_for(mesh, False)
+        self.batch = batch
+        self.max_len = max_len
+        self._queue: list[np.ndarray] = []
+
+    def submit(self, prompt_tokens: np.ndarray):
+        self._queue.append(np.asarray(prompt_tokens, np.int32))
+
+    def run_wave(self, max_new: int = 32) -> list[np.ndarray]:
+        """Serve up to ``batch`` queued requests; returns generated ids."""
+        if not self._queue:
+            return []
+        wave, self._queue = self._queue[: self.batch], self._queue[self.batch :]
+        B = len(wave)
+        plen = max(len(w) for w in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, w in enumerate(wave):
+            toks[i, plen - len(w) :] = w  # left-pad (shared positions)
+        cache = lm.init_cache(self.cfg, B, plen + max_new)
+        batch = {"tokens": jnp.asarray(toks)}
+        last, cache = lm.prefill(self.params, self.cfg, self.ax, batch, cache)
+        out = [jnp.argmax(last[:, : self.cfg.vocab_size], -1)[:, None].astype(jnp.int32)]
+        pos = plen
+        for _ in range(max_new - 1):
+            nxt, cache = lm.decode_step(
+                self.params, self.cfg, self.ax, out[-1], pos, cache
+            )
+            out.append(nxt)
+            pos += 1
+        gen = np.concatenate([np.asarray(o) for o in out], axis=1)
+        return [gen[i] for i in range(B)]

@@ -1,0 +1,4 @@
+from .train_step import TrainConfig, make_train_step
+from .trainer import Trainer
+
+__all__ = ["TrainConfig", "make_train_step", "Trainer"]

@@ -1,0 +1,80 @@
+"""Trainer: the production loop tying every substrate together.
+
+step loop -> data pipeline (prefetched, deterministic) -> train_step (xla or
+fmi mode) -> metrics -> async checkpoint every ``ckpt_every`` -> membership
+heartbeats -> on failure: ElasticController.heal() rebuilds the mesh from
+survivors and restores the last committed checkpoint (resharded), and the
+loop continues at the restored step.  StragglerPolicy feeds either the
+backup-worker plan or the subgroup-reduction mask.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..data.pipeline import DataConfig, Pipeline, synthetic_batch
+from ..models import lm
+from ..models.config import ModelConfig
+from ..runtime import Membership, StragglerPolicy
+from .train_step import TrainConfig, init_opt_state, make_train_step
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    tcfg: TrainConfig
+    mesh: object
+    batch: int
+    seq: int
+    multi_pod: bool = False
+    ckpt_dir: str = ""
+    ckpt_every: int = 50
+    data_cfg: DataConfig = field(default_factory=DataConfig)
+    log_every: int = 10
+
+    def __post_init__(self):
+        self.step_fn, self.ax, self.pspecs = make_train_step(
+            self.cfg, self.tcfg, self.mesh, self.multi_pod
+        )
+        self.ckpt = CheckpointManager(self.ckpt_dir) if self.ckpt_dir else None
+        n_ranks = int(np.prod(self.mesh.devices.shape))
+        self.membership = Membership(expected=n_ranks)
+        self.straggler = StragglerPolicy(n_ranks=n_ranks)
+        for r in range(n_ranks):
+            self.membership.join(r)
+
+    def init_state(self, seed: int = 0):
+        from .train_step import place_state
+
+        with jax.set_mesh(self.mesh):
+            params = lm.init_params(self.cfg, jax.random.key(seed))
+            opt = init_opt_state(self.cfg, self.tcfg, params)
+            params, opt = place_state(self.mesh, params, opt, self.pspecs, self.tcfg)
+        return params, opt
+
+    def run(self, params, opt_state, steps: int, start_step: int = 0):
+        history = []
+        with jax.set_mesh(self.mesh):
+            for step in range(start_step, start_step + steps):
+                batch = synthetic_batch(
+                    self.data_cfg, self.cfg, self.batch, self.seq, step
+                )
+                batch = jax.tree.map(jax.numpy.asarray, batch)
+                t0 = time.perf_counter()
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                metrics = jax.tree.map(float, jax.device_get(metrics))
+                dt = time.perf_counter() - t0
+                self.straggler.observe(0, dt)
+                history.append({"step": step, "time_s": dt, **metrics})
+                if self.ckpt and (step + 1) % self.ckpt_every == 0:
+                    self.ckpt.save_async(
+                        {"params": params, "opt": opt_state}, step + 1
+                    )
+        if self.ckpt:
+            self.ckpt.wait()
+        return params, opt_state, history

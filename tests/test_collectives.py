@@ -1,0 +1,209 @@
+"""Property tests for the FMI collective algorithms on the sim channel.
+
+Hypothesis sweeps rank counts (incl. non-powers-of-two where supported),
+payload sizes and dtypes; every algorithm is checked against the numpy
+oracle AND its α-β round/byte schedule is checked to match the instrumented
+channel trace *exactly* (the cost model is the code)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as A
+from repro.core import compression as COMP
+from repro.core.models import feasible, round_schedule
+from repro.core.transport import SimTransport
+
+ANY_P = st.integers(min_value=1, max_value=12)
+POW2_P = st.sampled_from([1, 2, 4, 8, 16])
+NELEM = st.sampled_from([1, 3, 8])
+
+
+def _data(P, n, dtype=np.float32, seed=0):
+    rng = np.random.default_rng(seed + P * 1000 + n)
+    return rng.normal(size=(P, n)).astype(dtype)
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=ANY_P, n=NELEM, seed=st.integers(0, 3))
+def test_bcast_binomial(P, n, seed):
+    x = _data(P, n, seed=seed)
+    root = seed % P
+    out = A.bcast_binomial(SimTransport(P), x.copy(), root=root)
+    np.testing.assert_allclose(out, np.broadcast_to(x[root], x.shape))
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=ANY_P, n=NELEM, seed=st.integers(0, 3))
+def test_reduce_binomial(P, n, seed):
+    x = _data(P, n, seed=seed)
+    root = seed % P
+    out = A.reduce_binomial(SimTransport(P), x.copy(), "add", root=root)
+    np.testing.assert_allclose(out[root], x.sum(0), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=ANY_P, n=NELEM, seed=st.integers(0, 3))
+def test_allreduce_recursive_doubling_any_p(P, n, seed):
+    x = _data(P, n, seed=seed)
+    out = A.allreduce_recursive_doubling(SimTransport(P), x.copy(), "add")
+    np.testing.assert_allclose(out, np.broadcast_to(x.sum(0), x.shape), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=POW2_P, c=NELEM, seed=st.integers(0, 3),
+       algo=st.sampled_from(["ring", "rabenseifner"]))
+def test_allreduce_bandwidth_optimal(P, c, seed, algo):
+    x = _data(P, P * c, seed=seed)
+    fn = A.allreduce_ring if algo == "ring" else A.allreduce_rabenseifner
+    out = fn(SimTransport(P), x.copy(), "add")
+    np.testing.assert_allclose(out, np.broadcast_to(x.sum(0), x.shape), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(P=POW2_P, c=NELEM, seed=st.integers(0, 3))
+def test_reduce_scatter_and_allgather(P, c, seed):
+    x = _data(P, P * c, seed=seed)
+    rs = A.halving_reduce_scatter(SimTransport(P), x.copy(), "add")
+    want = x.sum(0).reshape(P, c)
+    np.testing.assert_allclose(rs, want, rtol=1e-5, atol=1e-5)  # rank r -> chunk r
+    ag = A.doubling_allgather(SimTransport(P), rs)
+    np.testing.assert_allclose(ag[0], want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(P=ANY_P, n=NELEM, seed=st.integers(0, 3))
+def test_scan_prefix_sum(P, n, seed):
+    x = _data(P, n, seed=seed)
+    out = A.scan_hillis_steele(SimTransport(P), x.copy(), "add")
+    np.testing.assert_allclose(out, np.cumsum(x, 0), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(P=POW2_P, c=st.sampled_from([1, 2]), seed=st.integers(0, 3))
+def test_alltoall(P, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(P, P, c)).astype(np.float32)
+    out = A.alltoall_pairwise(SimTransport(P), x.copy())
+    want = np.stack([np.stack([x[j, r] for j in range(P)]) for r in range(P)])
+    np.testing.assert_allclose(out, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(P=POW2_P, seed=st.integers(0, 3))
+def test_scatter(P, seed):
+    rng = np.random.default_rng(seed)
+    payload = rng.normal(size=(P, 3)).astype(np.float32)
+    x = np.broadcast_to(payload, (P, P, 3)).copy()
+    out = A.scatter_halving(SimTransport(P), x, root=0)
+    np.testing.assert_allclose(out, payload)
+
+
+@settings(max_examples=15, deadline=None)
+@given(P=st.sampled_from([2, 4, 8]))
+def test_max_and_custom_ops(P):
+    x = _data(P, 4)
+    out = A.allreduce_recursive_doubling(SimTransport(P), x.copy(), "max")
+    np.testing.assert_allclose(out, np.broadcast_to(x.max(0), x.shape))
+    out2 = A.allreduce_recursive_doubling(
+        SimTransport(P), x.copy(), lambda a, b: np.minimum(a, b)
+    )
+    np.testing.assert_allclose(out2, np.broadcast_to(x.min(0), x.shape))
+
+
+# ---------------------------------------------------------------------------
+# the cost model IS the code: trace == schedule, exactly
+# ---------------------------------------------------------------------------
+
+SCHEDULE_CASES = [
+    ("allreduce", "recursive_doubling", A.allreduce_recursive_doubling, False),
+    ("allreduce", "ring", A.allreduce_ring, False),
+    ("allreduce", "rabenseifner", A.allreduce_rabenseifner, False),
+    ("reduce_scatter", "ring", A.ring_reduce_scatter, False),
+    ("reduce_scatter", "recursive_halving", A.halving_reduce_scatter, False),
+    ("bcast", "binomial", lambda t, x: A.bcast_binomial(t, x, 0), False),
+    ("reduce", "binomial", lambda t, x: A.reduce_binomial(t, x, "add", 0), False),
+    ("scan", "hillis_steele", A.scan_hillis_steele, False),
+]
+
+
+@pytest.mark.parametrize("P", [2, 3, 4, 5, 8, 16])
+@pytest.mark.parametrize("op,algo,fn,_", SCHEDULE_CASES,
+                         ids=[f"{o}/{a}" for o, a, _, __ in SCHEDULE_CASES])
+def test_trace_matches_model(op, algo, fn, _, P):
+    if not feasible(op, algo, P):
+        pytest.skip("pow2-only algorithm")
+    n = P * 4
+    t = SimTransport(P)
+    fn(t, np.zeros((P, n), np.float32))
+    got = [float(b) for b, _c in t.trace.per_round]
+    want = [float(w) for w in round_schedule(op, algo, n * 4, P)]
+    assert got == want, f"{op}/{algo} P={P}: trace {got} != model {want}"
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_trace_matches_model_chunked(P):
+    c = 4
+    t = SimTransport(P)
+    A.alltoall_pairwise(t, np.zeros((P, P, c), np.float32))
+    got = [float(b) for b, _ in t.trace.per_round]
+    assert got == [float(w) for w in round_schedule("alltoall", "pairwise", P * c * 4, P)]
+
+    t = SimTransport(P)
+    A.allgather_natural_ring(t, np.zeros((P, c), np.float32))
+    got = [float(b) for b, _ in t.trace.per_round]
+    assert got == [float(w) for w in round_schedule("allgather", "ring", P * c * 4, P)]
+
+    t = SimTransport(P)
+    A.doubling_allgather(t, np.zeros((P, c), np.float32))
+    got = [float(b) for b, _ in t.trace.per_round]
+    assert got == [
+        float(w) for w in round_schedule("allgather", "recursive_doubling", P * c * 4, P)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# compressed allreduce
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", [2, 4, 8])
+def test_compressed_allreduce_error_bound(P):
+    block = 64
+    n = P * block * 2
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(P, n)).astype(np.float32)
+    t = SimTransport(P)
+    out = COMP.compressed_ring_allreduce(t, x.copy(), "add", block=block)
+    want = x.sum(0)
+    rel = np.abs(out[0] - want).max() / np.abs(want).max()
+    assert rel < 0.05, f"compressed allreduce rel err {rel}"
+    # wire bytes: int8 payload + f32 scales, 2 messages per hop
+    per_hop = n // P + (n // P // block) * 4
+    assert t.trace.bytes_per_rank == 2 * (P - 1) * per_hop
+
+
+def test_error_feedback_reduces_bias():
+    P, block = 4, 64
+    n = P * block
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(P, n)).astype(np.float32)
+    want = x.sum(0)
+    res = np.zeros_like(x)
+    accum_plain, accum_ef = np.zeros(n), np.zeros(n)
+    for step in range(20):
+        t = SimTransport(P)
+        out_p = COMP.compressed_ring_allreduce(t, x.copy(), "add", block=block)
+        accum_plain += np.asarray(out_p[0])
+        t = SimTransport(P)
+        out_e, res = COMP.compressed_allreduce_with_ef(t, x.copy(), res, "add", block=block)
+        accum_ef += np.asarray(out_e[0])
+    err_plain = np.abs(accum_plain / 20 - want).mean()
+    err_ef = np.abs(accum_ef / 20 - want).mean()
+    assert err_ef <= err_plain * 1.05  # EF averages out quantization bias
+
+
+def test_hierarchical_model_beats_flat_for_large_messages():
+    from repro.core.hierarchical import flat_time, hierarchical_time
+
+    assert hierarchical_time(1e8, 256, 2) < flat_time(1e8, 256, 2)

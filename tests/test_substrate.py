@@ -1,0 +1,220 @@
+"""Substrate tests: optimizer, checkpoint/restart, data determinism,
+membership/timeout policy, elastic controller, straggler mitigation."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.data.pipeline import DataConfig, Pipeline, synthetic_batch
+from repro.optim.optimizer import OptConfig, adamw_init, adamw_update, lr_at
+from repro.runtime import ElasticController, GroupError, Membership, StragglerPolicy
+from repro import configs
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200, weight_decay=0.0,
+                    clip_norm=0.0)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(4, 4)), jnp.float32)
+    params = {"w": jnp.zeros((4, 4))}
+    state = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(grads, state, params, cfg)
+    assert float(jnp.abs(params["w"] - target).max()) < 0.05
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, 0)) < 0.2
+    assert abs(float(lr_at(cfg, 10)) - 1.0) < 0.1
+    assert float(lr_at(cfg, 99)) < 0.2
+    assert float(lr_at(cfg, 99)) >= 0.1 - 1e-6
+
+
+def test_grad_clip_applied():
+    cfg = OptConfig(lr=0.0, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros((3,))}
+    state = adamw_init(params, cfg)
+    _, _, m = adamw_update({"w": jnp.full((3,), 100.0)}, state, params, cfg)
+    assert m["grad_norm"] > 100  # reported pre-clip norm
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "a": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+        "nested": {"b": jnp.asarray(rng.integers(0, 10, (3,)), jnp.int32),
+                   "c": jnp.asarray(rng.normal(size=(2, 2)), jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), tree, step=7)
+    restored, step = load_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    tree = _tree()
+    save_checkpoint(str(tmp_path), tree, step=1)
+    # a stale .tmp dir (simulated crash mid-save) must be ignored
+    os.makedirs(tmp_path / "step_000000002.tmp", exist_ok=True)
+    assert latest_step(str(tmp_path)) == 1
+    restored, step = load_checkpoint(str(tmp_path), jax.eval_shape(lambda: tree))
+    assert step == 1
+
+
+def test_checkpoint_manager_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(_tree(s), s)
+    mgr.wait()
+    steps = sorted(int(d[5:]) for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert steps == [3, 4]  # retention keeps last 2
+    restored, step = mgr.restore_latest(jax.eval_shape(lambda: _tree()))
+    assert step == 4
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(_tree(4)["a"]))
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    save_checkpoint(str(tmp_path), {"a": jnp.zeros((4,))}, step=1)
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), {"a": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_step_addressed():
+    cfg = DataConfig(seed=7)
+    mcfg = configs.get_reduced("llama3_2_1b")
+    b1 = synthetic_batch(cfg, mcfg, 4, 32, step=5)
+    b2 = synthetic_batch(cfg, mcfg, 4, 32, step=5)
+    b3 = synthetic_batch(cfg, mcfg, 4, 32, step=6)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # resumable
+    assert not np.array_equal(b1["tokens"], b3["tokens"])  # steps differ
+    # rank-sharded streams differ
+    b4 = synthetic_batch(cfg, mcfg, 4, 32, step=5, rank=1)
+    assert not np.array_equal(b1["tokens"], b4["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig()
+    mcfg = configs.get_reduced("llama3_2_1b")
+    b = synthetic_batch(cfg, mcfg, 2, 16, step=0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_prefetch_and_order():
+    cfg = DataConfig(prefetch=2)
+    mcfg = configs.get_reduced("llama3_2_1b")
+    pipe = Pipeline(cfg, mcfg, 2, 16, start_step=3)
+    s1, b1 = next(pipe)
+    s2, b2 = next(pipe)
+    pipe.close()
+    assert (s1, s2) == (3, 4)
+    want = synthetic_batch(cfg, mcfg, 2, 16, step=3)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), want["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# membership / elastic / straggler (paper §3.1 semantics)
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_membership_forms_and_times_out():
+    clk = FakeClock()
+    m = Membership(expected=4, form_timeout=10.0, clock=clk)
+    m.join(0)
+    clk.t = 5.0
+    m.join(1)
+    m.join(2)
+    clk.t = 11.0
+    with pytest.raises(GroupError):
+        m.join(3)  # timer expired before the full group joined
+
+
+def test_membership_heartbeat_failure_detection():
+    clk = FakeClock()
+    m = Membership(expected=3, heartbeat_timeout=5.0, clock=clk)
+    for r in range(3):
+        m.join(r)
+    assert m.formed
+    clk.t = 3.0
+    m.heartbeat(0)
+    m.heartbeat(1)  # rank 2 silent
+    clk.t = 7.0
+    assert m.dead_ranks() == [2]
+    with pytest.raises(GroupError):
+        m.check_alive()
+    assert m.survivors() == [0, 1]
+
+
+def test_elastic_controller_heals_to_pow2():
+    clk = FakeClock()
+    m = Membership(expected=8, heartbeat_timeout=5.0, clock=clk)
+    for r in range(8):
+        m.join(r)
+    clk.t = 3.0
+    for r in range(7):  # rank 7 dies
+        m.heartbeat(r)
+    clk.t = 7.0  # rank 7 (last beat t=0) exceeds the 5s heartbeat timeout
+    rebuilt, restored = [], []
+    ctl = ElasticController(
+        membership=m,
+        rebuild=lambda dp: rebuilt.append(dp),
+        restore=lambda: restored.append(1) or 42,
+        min_degree=2,
+    )
+    healed = ctl.step_or_heal(lambda: None)
+    assert healed
+    assert rebuilt == [4]  # 7 survivors -> pow2 floor 4
+    assert ctl.history[0]["step"] == 42
+
+
+def test_straggler_detection_and_plans():
+    sp = StragglerPolicy(n_ranks=4, threshold=2.0, min_samples=2)
+    for _ in range(3):
+        for r in range(4):
+            sp.observe(r, 1.0 if r != 2 else 5.0)
+    assert sp.stragglers() == [2]
+    assert sp.backup_plan() == {2: 3}  # buddy = rank ^ 1
+    mask, scale = sp.subgroup_scale()
+    np.testing.assert_array_equal(mask, [1, 1, 0, 1])
+    assert abs(scale - 4 / 3) < 1e-9
+
+
+def test_straggler_none_without_samples():
+    sp = StragglerPolicy(n_ranks=4, min_samples=5)
+    sp.observe(0, 10.0)
+    assert sp.stragglers() == []
