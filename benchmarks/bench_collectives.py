@@ -1,10 +1,16 @@
-"""Paper Figure 5: collective latency vs worker count, per channel.
+"""Paper Figure 5: collective latency vs worker count, per channel — plus
+the pipelined-allreduce sweep.
 
 For every (op, P, channel): derived = α-β-modeled completion time (the
 paper's Fig. 5 curves — storage channels use the mediated-algorithm models,
 direct channels the selected algorithm's round schedule); us_per_call =
 measured wall time of the *actual algorithm executing* on the instrumented
-sim channel (arbitrary P on one host — counts real rounds/bytes)."""
+sim channel (arbitrary P on one host — counts real rounds/bytes).
+
+The pipeline sweep runs the chunk-streamed ring/Rabenseifner allreduce at
+depths 1/2/4/8 on the sim oracle and reports messages vs serialized rounds
+(trace.rounds / trace.serial_rounds) next to the α-β(+γ) modeled time the
+selector ranks by."""
 
 from __future__ import annotations
 
@@ -13,9 +19,14 @@ import time
 import numpy as np
 
 from repro.core import algorithms as A
-from repro.core.models import CHANNELS, collective_time, mediated_collective
+from repro.core.models import (
+    CHANNELS,
+    collective_time_ext,
+    mediated_collective,
+    pipeline_round_counts,
+)
 from repro.core.selector import select
-from repro.core.transport import SimTransport
+from repro.core.transport import HostTransport, SimTransport
 
 OPS = {
     "allreduce": lambda t, x: A.allreduce_recursive_doubling(t, x, "add"),
@@ -29,8 +40,10 @@ OPS = {
 NBYTES = {"allreduce": 4, "bcast": 4, "reduce": 4, "scan": 4,
           "gather": 20_000, "scatter": 20_000, "barrier": 1}
 
+PIPELINE_SWEEP_BYTES = 64 << 20  # 64 MB: the regime where depth > 1 wins
 
-def run():
+
+def _fig5_rows():
     rows = []
     for op, fn in OPS.items():
         for P in (2, 4, 8, 16, 32, 64):
@@ -40,9 +53,9 @@ def run():
             fn(t, x.copy())
             us = (time.perf_counter() - t0) * 1e6
             parts = []
-            for ch in ("s3", "redis", "direct", "ici"):
+            for ch in ("s3", "redis", "direct", "ici", "host"):
                 spec = CHANNELS[ch]
-                if spec.kind == "mediated" and ch != "ici":
+                if spec.kind == "mediated" and ch != "host":
                     try:
                         mt = mediated_collective(op, NBYTES[op], P, spec).time
                     except KeyError:
@@ -60,3 +73,53 @@ def run():
                 + " ".join(parts),
             ))
     return rows
+
+
+def _pipeline_rows():
+    rows = []
+    fns = {"ring": A.allreduce_ring_pipelined,
+           "rabenseifner": A.allreduce_rabenseifner_pipelined}
+    for algo, fn in fns.items():
+        for P in (8, 16):
+            n = P * 64  # elements; big enough that every depth segments fully
+            x = np.random.default_rng(1).normal(size=(P, n)).astype(np.float32)
+            base = A.ALGORITHMS["allreduce"][algo](SimTransport(P), x.copy(), "add")
+            for depth in (1, 2, 4, 8):
+                t = SimTransport(P)
+                t0 = time.perf_counter()
+                out = fn(t, x.copy(), "add", depth=depth)
+                us = (time.perf_counter() - t0) * 1e6
+                exact = bool(np.array_equal(np.asarray(out), np.asarray(base)))
+                msgs, serial = pipeline_round_counts("allreduce", algo, P, depth)
+                model_us = collective_time_ext(
+                    "allreduce", algo, PIPELINE_SWEEP_BYTES, P,
+                    CHANNELS["ici"], depth=depth,
+                ) * 1e6
+                rows.append((
+                    f"pipeline/{algo}/P{P}/depth{depth}", us,
+                    f"msgs={t.trace.rounds}(model {msgs}) "
+                    f"serial={t.trace.serial_rounds}(model {serial}) "
+                    f"bitexact={exact} ici_model_64MB={model_us:.0f}us",
+                ))
+    return rows
+
+
+def _host_rows():
+    rows = []
+    for P in (4, 8):
+        x = np.random.default_rng(2).normal(size=(P, 64)).astype(np.float32)
+        t = HostTransport(P)
+        t0 = time.perf_counter()
+        A.allreduce_ring(t, x.copy(), "add")
+        us = (time.perf_counter() - t0) * 1e6
+        s = t.broker.stats
+        rows.append((
+            f"collectives/allreduce@host/P{P}", us,
+            f"hop_rounds={t.trace.rounds} puts={s.puts} gets={s.gets} "
+            f"trace_time={t.trace.time(CHANNELS['host'].alpha, CHANNELS['host'].beta)*1e3:.2f}ms",
+        ))
+    return rows
+
+
+def run():
+    return _fig5_rows() + _pipeline_rows() + _host_rows()

@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Mirrors the paper's C++/Python snippets: build a communicator, scatter,
-allreduce with a custom operator, scan — and ask the model-driven selector
-which algorithm/channel it would pick and at what price.
+allreduce with a custom operator, scan — then ask the model-driven selector
+which channel/algorithm/pipeline-depth it would pick, at what price, across
+the whole channel registry (direct ici, mediated host broker, sim oracle,
+and their hierarchical composites).
 """
 
 import os
@@ -16,13 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import collectives as C
 from repro.core.communicator import Communicator
-from repro.core.selector import explain
+from repro.core.selector import explain, select
 
 
 def main():
-    mesh = jax.make_mesh((8,), ("world",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("world",), auto_axes=True)
     # "Here, the communicator contains 8 functions; each has a unique id"
     comm = Communicator(axes=("world",), sizes=(8,), name="world")
 
@@ -38,17 +41,17 @@ def main():
         biggest = C.allreduce(x, comm, op=lambda a, b: jnp.maximum(a, b),
                               algorithm="recursive_doubling")
         # prefix scan across ranks
-        ranks = C.scan(jnp.ones((1,)) , comm)
+        ranks = C.scan(jnp.ones((1,)), comm)
         return chunk, biggest, ranks, me
 
-    run = jax.jit(jax.shard_map(
+    run = jax.jit(compat.shard_map(
         lambda v: tuple(o[None] for o in program(v[0])),
         mesh=mesh, in_specs=P("world", None),
         out_specs=(P("world", None), P("world", None), P("world", None), P("world")),
         axis_names={"world"},
     ))
     x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 16)), jnp.float32)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         chunk, biggest, ranks, me = run(x)
 
     for r in range(8):
@@ -59,8 +62,12 @@ def main():
           float(biggest[0, 0]) == float(x.max(0)[0]))
     print("scan     : rank r has prefix count r+1        OK")
 
-    print("\nmodel-driven selection for a 4 MB allreduce over 256 chips:")
-    print(explain("allreduce", 4 << 20, 256, channels=("ici",)))
+    print("\nmodel-driven selection for a 4 MB allreduce over 16 ranks,")
+    print("across the channel registry (flat, pipelined, hierarchical):")
+    print(explain("allreduce", 4 << 20, 16, channels=("ici", "host", "sim")))
+    best = select("allreduce", 4 << 20, 16, channels=("ici", "host", "sim"))
+    print(f"\nselected: {best.channel}/{best.algorithm} depth={best.depth}")
+
     print("\n...and the same exchange on the paper's AWS channels (8 workers):")
     print(explain("allreduce", 1 << 20, 8, channels=("s3", "redis", "direct")))
 

@@ -4,8 +4,10 @@ The paper (§3.1) delegates fault tolerance to checkpoint/restart on top of
 the communication layer; this module is that layer for the trainer:
 
 * **format** — one ``msgpack`` file per host (``shard-<process>.msgpack``)
-  holding zstd-compressed leaf buffers keyed by pytree path, plus a
-  ``manifest.json`` (step, leaf index, shapes/dtypes, host count).
+  holding leaf buffers keyed by pytree path (zstd-compressed when the
+  optional ``zstandard`` dependency is installed, raw bytes otherwise; the
+  codec is recorded per leaf), plus a ``manifest.json`` (step, leaf index,
+  shapes/dtypes, host count).
 * **atomicity** — everything is written to ``<dir>.tmp`` and committed with
   a single ``os.rename``; a crash mid-save never corrupts the latest
   checkpoint (restore scans for the newest *committed* step).
@@ -29,7 +31,21 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional dependency: `pip install fmi-repro[compression]`
+    import zstandard
+except ImportError:  # plain-bytes fallback below keeps checkpoints working
+    zstandard = None
+
+
+def _require_zstandard():
+    if zstandard is None:
+        raise ModuleNotFoundError(
+            "this checkpoint was written with zstd compression; reading it "
+            "requires the optional 'zstandard' dependency "
+            "(pip install fmi-repro[compression])"
+        )
+    return zstandard
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -47,12 +63,19 @@ def save_checkpoint(path: str, tree: Any, step: int, process: int = 0,
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
     leaves = _flatten(tree)
-    cctx = zstandard.ZstdCompressor(level=3)
+    # zstd when available, raw bytes otherwise (codec recorded per leaf so
+    # readers on either install can open either checkpoint)
+    if zstandard is not None:
+        cctx = zstandard.ZstdCompressor(level=3)
+        codec, encode = "zstd", cctx.compress
+    else:
+        codec, encode = "raw", bytes
     payload = {
         k: {
             "shape": list(v.shape),
             "dtype": str(v.dtype),
-            "data": cctx.compress(np.ascontiguousarray(v).tobytes()),
+            "codec": codec,
+            "data": encode(np.ascontiguousarray(v).tobytes()),
         }
         for k, v in leaves.items()
     }
@@ -95,7 +118,17 @@ def load_checkpoint(path: str, target: Any, step: int | None = None,
     final = os.path.join(path, f"step_{step:09d}")
     with open(os.path.join(final, f"shard-{process:05d}.msgpack"), "rb") as f:
         payload = msgpack.unpackb(f.read(), raw=False)
-    dctx = zstandard.ZstdDecompressor()
+
+    dctx = None  # one decompressor for the whole checkpoint, made on demand
+
+    def _decode(entry) -> bytes:
+        nonlocal dctx
+        # pre-codec checkpoints (no 'codec' key) were always zstd
+        if entry.get("codec", "zstd") == "zstd":
+            if dctx is None:
+                dctx = _require_zstandard().ZstdDecompressor()
+            return dctx.decompress(entry["data"])
+        return entry["data"]
 
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_leaves = (
@@ -108,7 +141,7 @@ def load_checkpoint(path: str, target: Any, step: int | None = None,
             raise KeyError(f"checkpoint missing leaf {key}")
         entry = payload[key]
         arr = np.frombuffer(
-            dctx.decompress(entry["data"]), dtype=np.dtype(entry["dtype"])
+            _decode(entry), dtype=np.dtype(entry["dtype"])
         ).reshape(entry["shape"])
         if tuple(arr.shape) != tuple(leaf.shape):
             raise ValueError(f"{key}: shape {arr.shape} != target {leaf.shape}")

@@ -1,0 +1,45 @@
+"""Small shims over jax API differences between versions.
+
+The repo targets current jax but must stay runnable on older releases
+(e.g. 0.4.37, where ``Compiled.cost_analysis()`` returns a one-element
+list of dicts instead of a dict, and ``jax.shard_map``/``jax.set_mesh``
+live under older names).  Version quirks get one shim here, used by both
+src and tests, so the next quirk is fixed in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def cost_analysis(compiled) -> dict:
+    """``Compiled.cost_analysis()`` as a dict on every jax version."""
+    ca = compiled.cost_analysis()
+    return ca[0] if isinstance(ca, (list, tuple)) else ca
+
+
+def shard_map(fn, mesh, in_specs, out_specs, axis_names=None):
+    """``jax.shard_map`` on current jax, ``jax.experimental.shard_map`` on
+    older releases (which infer axis names from the mesh)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh; on older
+    jax the Mesh object itself is the context manager."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def make_mesh(axis_shapes, axis_names, auto_axes: bool = False):
+    """``jax.make_mesh`` with ``axis_types`` only where it exists."""
+    kwargs = {}
+    if auto_axes and hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = tuple(
+            jax.sharding.AxisType.Auto for _ in axis_names
+        )
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)

@@ -9,16 +9,38 @@ The paper's contribution as a composable JAX library:
     grads = collectives.allreduce_tree(grads, comm, algorithm="auto", mean=True)
 """
 
-from . import algorithms, collectives, compression, hierarchical, models, pricing, selector
+from . import (
+    algorithms,
+    channels,
+    collectives,
+    compression,
+    hierarchical,
+    models,
+    pricing,
+    selector,
+)
+from .channels import Channel, get_channel, register_channel
 from .communicator import Communicator
-from .transport import ChannelTrace, JaxTransport, SimTransport
+from .transport import (
+    ChannelTrace,
+    HostBroker,
+    HostTransport,
+    JaxTransport,
+    SimTransport,
+)
 
 __all__ = [
     "Communicator",
+    "Channel",
+    "get_channel",
+    "register_channel",
     "JaxTransport",
     "SimTransport",
+    "HostTransport",
+    "HostBroker",
     "ChannelTrace",
     "algorithms",
+    "channels",
     "collectives",
     "compression",
     "hierarchical",

@@ -190,6 +190,109 @@ def allreduce_ring(t: Transport, x, op="add"):
     return t.reshape(out, t.lshape(x))
 
 
+# ---------------------------------------------------------------------------
+# Chunk-streamed (pipelined) bandwidth-class algorithms
+#
+# Each reducing round's payload is split into ``depth`` contiguous segments;
+# segment j+1 is sent (``overlap=True``) while segment j's reduce runs, so
+# the serialized-round count stays at the unpipelined schedule length while
+# per-segment reduce latency leaves the critical path.  The arithmetic is
+# the *same elementwise operations in the same order* as the unpipelined
+# algorithm — results are bit-exact, which the sim-oracle tests assert.
+# ---------------------------------------------------------------------------
+
+
+def _segments(n: int, depth: int) -> list[tuple[int, int]]:
+    """Split ``n`` elements into ``min(depth, n)`` contiguous (start, size)
+    spans whose sizes differ by at most one."""
+    depth = max(1, min(int(depth), int(n)))
+    base, rem = divmod(int(n), depth)
+    spans, lo = [], 0
+    for j in range(depth):
+        sz = base + (1 if j < rem else 0)
+        spans.append((lo, sz))
+        lo += sz
+    return spans
+
+
+def ring_reduce_scatter_pipelined(t: Transport, x, op="add", depth: int = 2):
+    """:func:`ring_reduce_scatter` with each hop's chunk streamed in
+    ``depth`` segments (same ownership convention, bit-identical result)."""
+    P = t.size
+    opf = resolve_op(op)
+    chunks = _as_chunks(t, x)
+    if P == 1:
+        return _chunk_squeeze(t, chunks, 0)
+    r = t.rank()
+    c = t.lshape(chunks)[1]
+    spans = _segments(c, depth)
+    ring: Perm = [(i, (i + 1) % P) for i in range(P)]
+    for i in range(P - 1):
+        send_idx = (r - i) % P
+        recv_idx = (r - i - 1) % P
+        send = t.dynslice(chunks, send_idx, 1, axis=0)
+        cur = t.dynslice(chunks, recv_idx, 1, axis=0)
+        pieces = []
+        for j, (lo, sz) in enumerate(spans):
+            sseg = t.dynslice(send, lo, sz, axis=1)
+            rseg = t.ppermute(sseg, ring, overlap=j > 0)
+            cseg = t.dynslice(cur, lo, sz, axis=1)
+            pieces.append(opf(cseg, rseg))
+        chunks = t.dynupdate(chunks, t.concat(pieces, axis=1), recv_idx, axis=0)
+    own = (r + 1) % P
+    return _chunk_squeeze(t, t.dynslice(chunks, own, 1, axis=0), None)
+
+
+def allreduce_ring_pipelined(t: Transport, x, op="add", depth: int = 2):
+    """Pipelined ring allreduce: chunk-streamed RS + plain AG (the allgather
+    has no reduce to overlap, so segmenting it would only add injections)."""
+    chunk = ring_reduce_scatter_pipelined(t, x, op, depth=depth)
+    out = ring_allgather(t, chunk)
+    return t.reshape(out, t.lshape(x))
+
+
+def halving_reduce_scatter_pipelined(t: Transport, x, op="add", depth: int = 2):
+    """:func:`halving_reduce_scatter` with each halving step's window
+    streamed in ``depth`` segments along the chunk axis (pow2 P)."""
+    P = t.size
+    opf = resolve_op(op)
+    chunks = _as_chunks(t, x)
+    if P == 1:
+        return _chunk_squeeze(t, chunks, 0)
+    if not is_pow2(P):
+        raise ValueError("halving_reduce_scatter requires power-of-two ranks")
+    r = t.rank()
+    c = t.lshape(chunks)[1]
+    spans = _segments(c, depth)
+    window = chunks
+    length = P
+    while length > 1:
+        half = length // 2
+        dist = half
+        pairs: Perm = [(i, i ^ dist) for i in range(P)]
+        i_am_low = (r & dist) == 0
+        send_start = t.where(i_am_low, half, 0)
+        keep_start = t.where(i_am_low, 0, half)
+        send = t.dynslice(window, send_start, half, axis=0)
+        keep = t.dynslice(window, keep_start, half, axis=0)
+        pieces = []
+        for j, (lo, sz) in enumerate(spans):
+            sseg = t.dynslice(send, lo, sz, axis=1)
+            rseg = t.ppermute(sseg, pairs, overlap=j > 0)
+            kseg = t.dynslice(keep, lo, sz, axis=1)
+            pieces.append(opf(kseg, rseg))
+        window = t.concat(pieces, axis=1)
+        length = half
+    return _chunk_squeeze(t, window, None)
+
+
+def allreduce_rabenseifner_pipelined(t: Transport, x, op="add", depth: int = 2):
+    """Pipelined Rabenseifner: chunk-streamed halving RS + plain doubling AG."""
+    chunk = halving_reduce_scatter_pipelined(t, x, op, depth=depth)
+    out = doubling_allgather(t, chunk)
+    return t.reshape(out, t.lshape(x))
+
+
 def halving_reduce_scatter(t: Transport, x, op="add"):
     """Recursive-halving reduce-scatter (pow2 P): rank r gets chunk r."""
     P = t.size
@@ -426,4 +529,19 @@ ALGORITHMS: dict[str, dict[str, Callable]] = {
     "scatter": {"binomial_halving": scatter_halving},
     "gather": {"ring": gather_ring},
     "barrier": {"recursive_doubling": barrier},
+}
+
+# Chunk-streamed variants, keyed like ALGORITHMS; callables take an extra
+# ``depth`` kwarg.  The selector picks the depth from the α-β model
+# (models.best_pipeline_depth); collectives.py dispatches here when the
+# chosen candidate has depth > 1.
+PIPELINED: dict[str, dict[str, Callable]] = {
+    "allreduce": {
+        "ring": allreduce_ring_pipelined,
+        "rabenseifner": allreduce_rabenseifner_pipelined,
+    },
+    "reduce_scatter": {
+        "ring": ring_reduce_scatter_pipelined,
+        "recursive_halving": halving_reduce_scatter_pipelined,
+    },
 }

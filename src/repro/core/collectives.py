@@ -14,6 +14,10 @@ Shape handling: latency-class algorithms (recursive doubling, binomial,
 scan) run on the payload as-is; bandwidth-class chunked algorithms (ring,
 Rabenseifner, halving/doubling) ravel + zero-pad the payload to a multiple
 of the communicator size, and un-pad on the way out.
+
+Pipelining: under ``algorithm='auto'`` the selector also chooses a chunk
+pipelining depth for the bandwidth-class algorithms (round k+1's send
+overlaps round k's reduce); pass ``pipeline=<depth>`` to force it.
 """
 
 from __future__ import annotations
@@ -27,6 +31,7 @@ import jax.numpy as jnp
 from . import algorithms as A
 from .communicator import Communicator
 from .selector import select
+from .transport import is_pow2 as _is_pow2
 
 CHUNKED_ALLREDUCE = {"ring", "rabenseifner"}
 
@@ -41,20 +46,47 @@ def _nbytes(x) -> int:
     return int(math.prod(x.shape)) * x.dtype.itemsize
 
 
-def _resolve(op_name: str, x, comm: Communicator, algorithm: str, objective: str) -> str:
+def _resolve(
+    op_name: str, x, comm: Communicator, algorithm: str, objective: str,
+    t=None,
+) -> tuple[str, int]:
+    """(algorithm, pipeline depth) for this call — model-driven when 'auto'.
+
+    Explicit names pass through at depth 1; 'auto' asks the selector, which
+    prices every (algorithm, depth) candidate on the communicator's channel
+    with the α-β(+γ) model and returns the argmin.  On stacked (software)
+    transports ``x`` physically carries all P ranks, so the per-rank payload
+    the model prices is 1/P of it."""
     if algorithm != "auto":
-        return algorithm
+        return algorithm, 1
+    nbytes = _nbytes(x)
+    if t is not None and t.stacked:
+        nbytes = max(1, nbytes // t.size)
     cand = select(
         op_name,
-        _nbytes(x),
+        nbytes,
         comm.size,
         channels=(comm.channel,),
         objective=objective,
     )
-    return cand.algorithm
+    return cand.algorithm, cand.depth
 
 
-def _pad_flat(x, P: int):
+def _pad_flat(x, P: int, t=None):
+    """Ravel + zero-pad the per-rank payload to a multiple of ``P``.
+
+    Inside shard_map (JaxTransport) ``x`` is this rank's local shard; on a
+    stacked software transport (Sim/Host) ``x`` physically carries all P
+    ranks, so the ravel/pad happens per rank along the trailing axes and the
+    rank axis is preserved."""
+    if t is not None and t.stacked:
+        xp = t.xp
+        flat = xp.reshape(xp.asarray(x), (t.size, -1))
+        n = flat.shape[1]
+        pad = (-n) % P
+        if pad:
+            flat = xp.concatenate([flat, xp.zeros((t.size, pad), flat.dtype)], axis=1)
+        return flat, n
     flat = x.reshape(-1)
     n = flat.shape[0]
     pad = (-n) % P
@@ -63,42 +95,65 @@ def _pad_flat(x, P: int):
     return flat, n
 
 
+def _unpad(out, n: int, shape, t):
+    """Inverse of :func:`_pad_flat` for a full-size result."""
+    if t.stacked:
+        return t.xp.reshape(out, (t.size, -1))[:, :n].reshape(shape)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
 # ---------------------------------------------------------------------------
 
 
-def allreduce(x, comm: Communicator, op="add", algorithm="auto", objective="time"):
+def allreduce(x, comm: Communicator, op="add", algorithm="auto", objective="time",
+              pipeline: int | None = None):
+    """``pipeline``: chunk-streaming depth for the bandwidth-class
+    algorithms; None lets the selector pick it from the α-β model (only
+    meaningful with ``algorithm='auto'`` or ring/rabenseifner)."""
     if comm.size == 1:
         return x
-    algorithm = _resolve("allreduce", x, comm, algorithm, objective)
+    t = comm.transport()
+    algorithm, depth = _resolve("allreduce", x, comm, algorithm, objective, t)
+    if pipeline is not None:
+        depth = int(pipeline)
     if algorithm == "xla":
         if not isinstance(op, str) or op not in _XLA_OPS:
             raise ValueError(f"xla channel supports ops {sorted(_XLA_OPS)}")
         return _XLA_OPS[op](x, comm.axis_arg)
-    t = comm.transport()
     if algorithm in CHUNKED_ALLREDUCE:
-        flat, n = _pad_flat(x, comm.size)
-        out = A.ALGORITHMS["allreduce"][algorithm](t, flat, op)
-        return out.reshape(-1)[:n].reshape(x.shape)
+        flat, n = _pad_flat(x, comm.size, t)
+        if depth > 1:
+            out = A.PIPELINED["allreduce"][algorithm](t, flat, op, depth=depth)
+        else:
+            out = A.ALGORITHMS["allreduce"][algorithm](t, flat, op)
+        return _unpad(out, n, x.shape, t)
     return A.ALGORITHMS["allreduce"][algorithm](t, x, op)
 
 
-def reduce_scatter(x, comm: Communicator, op="add", algorithm="auto"):
+def reduce_scatter(x, comm: Communicator, op="add", algorithm="auto",
+                   pipeline: int | None = None):
     """Returns this rank's reduced chunk of ``x`` raveled: shape
     ``[ceil(x.size/P)]`` under the natural convention (rank r owns chunk r)."""
     if comm.size == 1:
         return x.reshape(-1)
-    if algorithm == "auto":
-        algorithm = "recursive_halving"  # bw-optimal with log rounds on pow2
-    flat, n = _pad_flat(x, comm.size)
+    t = comm.transport()
+    algorithm, depth = _resolve("reduce_scatter", x, comm, algorithm, "time", t)
+    if pipeline is not None:
+        depth = int(pipeline)
+    flat, n = _pad_flat(x, comm.size, t)
     if algorithm == "xla":
         if op != "add":
             raise ValueError("xla reduce_scatter supports add")
         return jax.lax.psum_scatter(flat, comm.axis_arg, scatter_dimension=0, tiled=True)
-    t = comm.transport()
     if algorithm == "recursive_halving":
+        if depth > 1:
+            return A.halving_reduce_scatter_pipelined(t, flat, op, depth=depth)
         return A.halving_reduce_scatter(t, flat, op)
     if algorithm == "ring":
-        chunk = A.ring_reduce_scatter(t, flat, op)
+        if depth > 1:
+            chunk = A.ring_reduce_scatter_pipelined(t, flat, op, depth=depth)
+        else:
+            chunk = A.ring_reduce_scatter(t, flat, op)
         # normalize ring convention (rank r owns chunk (r+1)%P) -> natural
         P = comm.size
         perm = [(i, (i + 1) % P) for i in range(P)]
@@ -108,11 +163,13 @@ def reduce_scatter(x, comm: Communicator, op="add", algorithm="auto"):
 
 def allgather(chunk, comm: Communicator, algorithm="auto"):
     """Natural convention: rank r contributes chunk r; returns flat
-    ``[P * chunk.size]`` (leading concat over ranks)."""
+    ``[P * chunk.size]`` (leading concat over ranks; on stacked software
+    transports the result is ``[P, P * chunk.size]``)."""
     if comm.size == 1:
         return chunk.reshape(-1)
     if algorithm == "auto":
-        algorithm = "recursive_doubling"
+        # doubling is pow2-only; ring handles any rank count
+        algorithm = "recursive_doubling" if _is_pow2(comm.size) else "ring"
     if algorithm == "xla":
         return jax.lax.all_gather(chunk.reshape(-1), comm.axis_arg, tiled=True)
     t = comm.transport()
@@ -121,21 +178,28 @@ def allgather(chunk, comm: Communicator, algorithm="auto"):
         if algorithm == "recursive_doubling"
         else A.allgather_natural_ring
     )
+    if t.stacked:
+        out = fn(t, t.xp.reshape(t.xp.asarray(chunk), (t.size, -1)))
+        return t.xp.reshape(out, (t.size, -1))
     out = fn(t, chunk.reshape(-1))
     return out.reshape(-1)
 
 
 def alltoall(x, comm: Communicator, algorithm="auto"):
-    """``x``: ``[P, c, ...]``; slot j goes to rank j, returns slot j from rank j."""
+    """``x``: logical ``[P, c, ...]`` per rank (stacked transports:
+    physical ``[P, P, c, ...]``); slot j goes to rank j, returns slot j
+    from rank j."""
     if comm.size == 1:
         return x
-    if x.shape[0] != comm.size:
-        raise ValueError(f"leading dim {x.shape[0]} != comm size {comm.size}")
     if algorithm == "auto":
         algorithm = "pairwise"
     if algorithm == "xla":
+        if x.shape[0] != comm.size:
+            raise ValueError(f"leading dim {x.shape[0]} != comm size {comm.size}")
         return jax.lax.all_to_all(x, comm.axis_arg, split_axis=0, concat_axis=0, tiled=False)
     t = comm.transport()
+    if t.lshape(x)[0] != comm.size:
+        raise ValueError(f"leading dim {t.lshape(x)[0]} != comm size {comm.size}")
     return A.alltoall_pairwise(t, x)
 
 
@@ -174,7 +238,8 @@ def barrier(comm: Communicator):
 
 
 def allreduce_tree(tree, comm: Communicator, op="add", algorithm="auto",
-                   objective="time", mean: bool = False):
+                   objective="time", mean: bool = False,
+                   pipeline: int | None = None):
     """Allreduce a pytree (e.g. gradients): leaves are grouped by dtype,
     raveled and fused into one payload per dtype (communication bucketing),
     reduced with one collective each, then split back.  ``mean=True``
@@ -188,7 +253,8 @@ def allreduce_tree(tree, comm: Communicator, op="add", algorithm="auto",
     out = list(leaves)
     for dtype, idxs in by_dtype.items():
         flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
-        red = allreduce(flat, comm, op=op, algorithm=algorithm, objective=objective)
+        red = allreduce(flat, comm, op=op, algorithm=algorithm, objective=objective,
+                        pipeline=pipeline)
         if mean:
             red = red / comm.size
         off = 0

@@ -24,7 +24,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
-from .transport import JaxTransport
+from .transport import Transport
 
 
 @dataclass(frozen=True)
@@ -47,9 +47,24 @@ class Communicator:
         """Axis argument for jax.lax collectives."""
         return self.axes if len(self.axes) > 1 else self.axes[0]
 
-    def transport(self) -> JaxTransport:
-        """Direct-channel transport; call inside shard_map only."""
-        return JaxTransport(self.axes, self.sizes)
+    def transport(self, **kwargs) -> Transport:
+        """This communicator's channel transport, instantiated through the
+        channel registry.  Mesh channels (ici/dcn) return a
+        :class:`~repro.core.transport.JaxTransport` — call inside shard_map
+        only; software channels (sim/host) are usable anywhere."""
+        from .channels import get_channel
+
+        return get_channel(self.channel).make_transport(
+            axes=self.axes, sizes=self.sizes, **kwargs
+        )
+
+    def explain(self, op: str, nbytes: float,
+                channels: tuple[str, ...] | None = None) -> str:
+        """Selector candidate table for ``op`` at ``nbytes`` on this group
+        (defaults to every transport-capable registered channel)."""
+        from .selector import explain as _explain
+
+        return _explain(op, nbytes, self.size, channels=channels)
 
     def sub(self, *axes: str) -> "Communicator":
         """Sub-communicator over a subset of this communicator's axes."""

@@ -15,8 +15,13 @@ vs. flat ring over the combined axes:  2·s·(P−1)/P · β_dcn-dominated.
 
 ``hierarchical_allreduce`` composes the generic algorithms from
 :mod:`repro.core.algorithms`, so it runs on both the sim and jax channels.
-The matching cost model is :func:`hierarchical_time`, used by the selector
-when a communicator spans axes with different channels.
+The matching cost model is :func:`hierarchical_time`; the selector uses it
+to emit the two-level ``"<inner>+<outer>"`` composite candidates for every
+ordered pair of registered channels (see :mod:`repro.core.channels` and
+``selector.explain``), mirroring the paper's multi-protocol choice between
+e.g. Redis-within-rack + S3-across-region.  Channel names resolve through
+:data:`repro.core.models.CHANNELS`, which the registry keeps in sync — a
+newly registered channel becomes a composite leg with no change here.
 """
 
 from __future__ import annotations
@@ -26,7 +31,7 @@ import jax.numpy as jnp
 from . import algorithms as A
 from . import collectives as C
 from .communicator import Communicator
-from .models import CHANNELS, collective_time
+from .models import CHANNELS, collective_time, collective_time_ext
 from .transport import Transport
 
 
@@ -75,16 +80,25 @@ def hierarchical_time(
     inner_rs: str = "recursive_halving",
     outer_ar: str = "recursive_doubling",
     inner_ag: str = "recursive_doubling",
+    gamma: float = 0.0,
 ) -> float:
-    """α-β model of the two-level allreduce (selector candidate)."""
+    """α-β model of the two-level allreduce (selector candidate).
+
+    ``gamma`` adds the exposed reduce-compute term per reducing round; the
+    selector passes ``models.GAMMA_REDUCE`` so composites are priced on the
+    same basis as the flat candidates they compete with (``gamma=0`` keeps
+    the pure wire model)."""
     t = 0.0
     if inner_P > 1:
-        t += collective_time("reduce_scatter", inner_rs, nbytes, inner_P, CHANNELS[inner_channel])
+        t += collective_time_ext("reduce_scatter", inner_rs, nbytes, inner_P,
+                                 CHANNELS[inner_channel], gamma=gamma)
     chunk_bytes = nbytes / max(inner_P, 1)
     if outer_P > 1:
-        t += collective_time("allreduce", outer_ar, chunk_bytes, outer_P, CHANNELS[outer_channel])
+        t += collective_time_ext("allreduce", outer_ar, chunk_bytes, outer_P,
+                                 CHANNELS[outer_channel], gamma=gamma)
     if inner_P > 1:
-        t += collective_time("allgather", inner_ag, nbytes, inner_P, CHANNELS[inner_channel])
+        t += collective_time_ext("allgather", inner_ag, nbytes, inner_P,
+                                 CHANNELS[inner_channel], gamma=gamma)
     return t
 
 

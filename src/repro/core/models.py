@@ -49,10 +49,11 @@ class ChannelSpec:
     persistent: bool = False
     serverless: bool = True  # no user-side provisioning needed
     max_message: float = float("inf")  # bytes
+    hops: int = 1  # serialized store-and-forward hops per message (mediated: 2)
     notes: str = ""
 
     def p2p_time(self, nbytes: float) -> float:
-        return self.alpha + nbytes * self.beta
+        return self.hops * (self.alpha + nbytes * self.beta)
 
 
 MB = 1e6
@@ -102,15 +103,33 @@ TPU_CHANNELS: dict[str, ChannelSpec] = {
         notes="XLA built-in collectives - the 'provider channel'",
     ),
     # Host-staged mediated channel: HBM->host RAM->HBM, PCIe-class bw.
+    # hops=2: every message is a PUT to the host broker then a GET from it,
+    # each paying the PCIe latency and occupying PCIe bandwidth once —
+    # matching the 2-records-per-ppermute trace of transport.HostTransport.
     "host": ChannelSpec(
         "host", alpha=20e-6, beta=1 / (8 * GB), kind="mediated", push=False,
-        persistent=True,
-        notes="host-staged exchange; the TPU analogue of storage channels "
-        "(used for checkpoints, not for inner-loop collectives)",
+        persistent=True, hops=2,
+        notes="host-broker staged exchange; the TPU analogue of the paper's "
+        "storage channels (S3/Redis): PUT+GET through shared host memory",
+    ),
+    # Instrumented software channel (numpy lockstep).  Modelled as a slow
+    # shared-memory interconnect so the selector has a genuine three-way
+    # choice; its trace is the oracle that validates every other model.
+    "sim": ChannelSpec(
+        "sim", alpha=5e-6, beta=1 / (16 * GB), kind="direct", push=True,
+        notes="instrumented numpy lockstep channel (test/cost oracle)",
     ),
 }
 
 CHANNELS: dict[str, ChannelSpec] = {**PAPER_CHANNELS, **TPU_CHANNELS}
+
+# Storage-backed channels priced by operation counts (mediated_collective)
+# rather than a round schedule; FAAS_CHANNELS are priced per serverless
+# function (paper eq. 1) — neither basis composes with chip-occupancy
+# pricing, which is why the selector excludes them from hierarchical
+# composites.
+STORAGE_CHANNELS: tuple[str, ...] = ("s3", "dynamodb", "redis")
+FAAS_CHANNELS: tuple[str, ...] = ("s3", "dynamodb", "redis", "direct")
 
 
 # TPU v5e chip-level roofline constants (targets; container runs CPU).
@@ -190,9 +209,125 @@ def round_schedule(op: str, algo: str, nbytes: float, P: int) -> list[float]:
 def collective_time(
     op: str, algo: str, nbytes: float, P: int, channel: ChannelSpec
 ) -> float:
-    """α-β time of one collective: Σ_rounds (α + bytes·β)."""
+    """α-β wire time of one collective: Σ_rounds hops·(α + bytes·β)."""
     sched = round_schedule(op, algo, nbytes, P)
-    return sum(channel.alpha + b * channel.beta for b in sched)
+    return sum(channel.hops * (channel.alpha + b * channel.beta) for b in sched)
+
+
+# ---------------------------------------------------------------------------
+# Chunk pipelining (overlap round k+1's send with round k's reduce)
+# ---------------------------------------------------------------------------
+
+# Reduce throughput of one chip: the reduction reads both operands from and
+# writes the result to HBM — 3 HBM touches per byte.  This is the γ term the
+# α-β model needs to price pipelining: without it, overlapping communication
+# with the reduce is free and depth would always be 1.
+GAMMA_REDUCE = 3.0 / 819e9  # s/byte (v5e HBM; see HardwareSpec below)
+
+# Injection overhead of each extra in-flight segment: the overlapped message
+# skips the propagation latency (it streams behind its predecessor) but
+# still pays the software send setup — a fixed fraction of α.
+SEG_ALPHA_FRACTION = 0.25
+
+# (op, algo) pairs whose implementation supports chunk-streamed pipelining
+# (see algorithms.ring_reduce_scatter_pipelined and friends).
+PIPELINEABLE = {
+    ("allreduce", "ring"),
+    ("allreduce", "rabenseifner"),
+    ("reduce_scatter", "ring"),
+    ("reduce_scatter", "recursive_halving"),
+}
+
+PIPELINE_DEPTHS = (1, 2, 4, 8)
+
+
+def reduce_round_count(op: str, algo: str, P: int) -> int:
+    """How many leading rounds of ``round_schedule`` apply the reduction
+    operator (those are the rounds pipelining can overlap)."""
+    L = ceil_log2(P)
+    if P <= 1:
+        return 0
+    table = {
+        ("allreduce", "ring"): P - 1,  # reduce-scatter phase
+        ("allreduce", "rabenseifner"): L,  # halving phase
+        ("reduce_scatter", "ring"): P - 1,
+        ("reduce_scatter", "recursive_halving"): L,
+    }
+    if (op, algo) in table:
+        return table[(op, algo)]
+    if (op, algo) == ("allreduce", "recursive_doubling") and not is_pow2(P):
+        # fold-in + RD rounds reduce; the trailing fold-out only copies
+        return len(round_schedule(op, algo, 1.0, P)) - 1
+    if op in ("allreduce", "reduce", "scan", "barrier"):
+        return len(round_schedule(op, algo, 1.0, P))  # every round reduces
+    return 0
+
+
+def collective_time_ext(
+    op: str,
+    algo: str,
+    nbytes: float,
+    P: int,
+    channel: ChannelSpec,
+    depth: int = 1,
+    gamma: float = GAMMA_REDUCE,
+) -> float:
+    """Wire time + exposed reduce time with chunk pipelining at ``depth``.
+
+    Per reducing round moving ``b`` bytes the serialized cost is
+
+        hops·(α + b·β)  +  b/depth·γ
+          +  (depth−1)·α·(SEG_ALPHA_FRACTION + hops − 1)
+
+    — the link stays busy for all of ``b`` regardless of segmentation, but
+    only the *last* segment's reduce is exposed (the others overlap the next
+    segment's transfer), at the price of one extra injection per segment.
+    On a store-and-forward channel (hops > 1) each extra segment also
+    exposes a full serialized download hop — a depth-D exchange through the
+    host broker costs D+1 slots, not 2, exactly as its trace records.
+    ``depth=1`` degenerates to the unpipelined serialized chain
+    (receive, then reduce, then send).  Used by the selector so depth-1 and
+    depth-D candidates are priced consistently."""
+    if (op, algo) not in PIPELINEABLE:
+        depth = 1
+    depth = max(1, int(depth))
+    sched = round_schedule(op, algo, nbytes, P)
+    nred = reduce_round_count(op, algo, P)
+    seg_alpha = channel.alpha * (SEG_ALPHA_FRACTION + (channel.hops - 1))
+    t = 0.0
+    for k, b in enumerate(sched):
+        t += channel.hops * (channel.alpha + b * channel.beta)
+        if k < nred:
+            t += (b / depth) * gamma
+            t += (depth - 1) * seg_alpha
+    return t
+
+
+def best_pipeline_depth(
+    op: str, algo: str, nbytes: float, P: int, channel: ChannelSpec,
+    depths: tuple = PIPELINE_DEPTHS,
+) -> int:
+    """argmin over ``depths`` of :func:`collective_time_ext` — the selector's
+    pipeline-depth decision in isolation."""
+    if (op, algo) not in PIPELINEABLE:
+        return 1
+    return min(depths, key=lambda d: collective_time_ext(op, algo, nbytes, P, channel, d))
+
+
+def pipeline_round_counts(op: str, algo: str, P: int, depth: int) -> tuple[int, int]:
+    """(total messages, serialized rounds) of the pipelined execution.
+
+    Chunk streaming splits every reducing round into ``depth`` messages, but
+    the extra messages overlap the previous segment's reduce — so the
+    serialized-round count stays at the unpipelined schedule length while
+    the message count grows.  The instrumented channel must confirm both
+    numbers exactly (``trace.rounds`` / ``trace.serial_rounds``)."""
+    sched_len = len(round_schedule(op, algo, float(P), P))
+    if (op, algo) not in PIPELINEABLE:
+        depth = 1
+    nred = reduce_round_count(op, algo, P)
+    total = nred * max(1, depth) + (sched_len - nred)
+    return total, sched_len
 
 
 def total_bytes_on_wire(op: str, algo: str, nbytes: float, P: int) -> float:

@@ -20,7 +20,13 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-from .models import CHANNELS, ChannelSpec, collective_time, mediated_collective
+from .models import (
+    CHANNELS,
+    STORAGE_CHANNELS,
+    ChannelSpec,
+    collective_time,
+    mediated_collective,
+)
 
 # --- paper Table 3 (AWS eu-central-1, USD) ---------------------------------
 P_FAAS = 1.67e-5  # Lambda, per GiB·s
@@ -79,8 +85,8 @@ def p2p_exchange_cost(
         c_usd = P_REDIS * t * n_exchanges
     elif channel_name == "direct":
         c_usd = P_HPS * t * n_exchanges
-    elif channel_name in ("ici", "dcn", "xla"):
-        c_usd = 0.0  # wire is part of the chip price
+    elif channel_name in ("ici", "dcn", "xla", "host", "sim"):
+        c_usd = 0.0  # wire/host path is part of the chip price
         f_usd = P * t * P_CHIP_S * n_exchanges
     else:
         raise KeyError(channel_name)
@@ -105,11 +111,18 @@ def collective_cost(
     algo: str | None = None,
     mem_gib: float = 2.0,
     poll_s: float = 20e-3,
+    spec: ChannelSpec | None = None,
+    time_s: float | None = None,
 ) -> ExchangeCost:
     """$ of ONE collective on a channel (direct: α-β time × occupancy;
-    mediated: storage ops + function time)."""
-    ch = CHANNELS[channel_name]
-    if ch.kind == "mediated" and channel_name in ("s3", "dynamodb", "redis"):
+    mediated: storage ops + function time).
+
+    ``spec`` lets registry-registered channels price themselves without an
+    entry in :data:`~repro.core.models.CHANNELS`; ``time_s`` overrides the
+    modelled time (the selector passes its pipelining-aware estimate so the
+    occupancy price matches the time it ranks by)."""
+    ch = spec if spec is not None else CHANNELS[channel_name]
+    if ch.kind == "mediated" and channel_name in STORAGE_CHANNELS:
         m = mediated_collective(op, nbytes, P, ch, poll_s)
         t = m.time
         f_usd = faas_cost(P, t, mem_gib)
@@ -125,11 +138,11 @@ def collective_cost(
 
     if algo is None:
         raise ValueError("direct channels need an algorithm")
-    t = collective_time(op, algo, nbytes, P, ch)
+    t = time_s if time_s is not None else collective_time(op, algo, nbytes, P, ch)
     if channel_name == "direct":
         f_usd = faas_cost(P, t, mem_gib)
         c_usd = P_HPS * t
-    else:  # TPU channels: chip-occupancy price
+    else:  # TPU/registered channels: chip-occupancy price
         f_usd = P * t * P_CHIP_S
         c_usd = 0.0
     return ExchangeCost(channel_name, t, f_usd, c_usd, f_usd + c_usd)

@@ -1,37 +1,59 @@
 """Model-driven channel/algorithm selection (the paper's §5 pay-off).
 
-Given (op, payload bytes, participants, channel, objective) the selector
-enumerates every feasible algorithm, prices it with the α-β time model and
-the $ model, and returns the argmin.  ``explain()`` returns the full
+Given (op, payload bytes, participants, channels, objective) the selector
+enumerates every feasible candidate, prices it with the α-β(+γ) time model
+and the $ model, and returns the argmin.  ``explain()`` returns the full
 candidate table — used by benchmarks and by ``launch/dryrun.py --explain``.
 
-The same machinery selects between *channels* (e.g. hierarchical ici+dcn vs
-flat dcn for cross-pod reduction) — mirroring the paper's choice between S3
-/ DynamoDB / Redis / direct TCP.
+Three candidate families (vs. the seed's single flat family):
+
+* **flat direct/provider** — every algorithm in ``models.DIRECT_ALGOS`` on
+  every registered channel, and for the bandwidth-class algorithms every
+  pipeline depth in ``models.PIPELINE_DEPTHS`` (chunk streaming: round
+  k+1's send overlaps round k's reduce; see ``algorithms.PIPELINED``);
+* **mediated storage** — the paper's S3/DynamoDB/Redis collectives, priced
+  by operation counts (``models.mediated_collective``);
+* **hierarchical composites** — two-level allreduce from
+  :mod:`repro.core.hierarchical`: reduce-scatter on the inner channel,
+  allreduce of the owned chunk on the outer channel, allgather back on the
+  inner channel.  Channel name ``"<inner>+<outer>"``, mirroring the paper's
+  hierarchical multi-protocol communication.
+
+Channels are resolved through :mod:`repro.core.channels` — registering a new
+channel there makes it a selector candidate with no change here.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+from .channels import default_channels, get_channel
 from .models import (
-    CHANNELS,
     DIRECT_ALGOS,
-    ChannelSpec,
-    collective_time,
+    FAAS_CHANNELS,
+    GAMMA_REDUCE,
+    PIPELINE_DEPTHS,
+    PIPELINEABLE,
+    STORAGE_CHANNELS,
     feasible,
+    is_pow2,
     mediated_collective,
 )
-from .pricing import collective_cost
+from .pricing import P_CHIP_S
 
 
 @dataclass(frozen=True)
 class Candidate:
     op: str
-    channel: str
+    channel: str  # registry name, or "<inner>+<outer>" for composites
     algorithm: str
     time_s: float
     price_usd: float
+    depth: int = 1  # chunk-pipelining depth (1 = unpipelined)
+
+    @property
+    def hierarchical(self) -> bool:
+        return "+" in self.channel
 
     def objective(self, objective: str, price_weight: float = 0.5) -> float:
         if objective == "time":
@@ -43,30 +65,96 @@ class Candidate:
         raise ValueError(f"unknown objective {objective!r}")
 
 
+def _default_inner(P: int) -> int | None:
+    """Default two-level split: the largest proper power-of-two divisor
+    (stands in for the pod size when the caller gives no topology)."""
+    d = 1 << (max(P - 1, 1).bit_length() - 1)  # largest pow2 < P
+    while d > 1:
+        if P % d == 0:
+            return d
+        d //= 2
+    return None
+
+
+def _flat_candidates(op, nbytes, P, ch_name, mem_gib, depths):
+    ch = get_channel(ch_name)
+    spec = ch.spec
+    out = []
+    if spec.kind == "mediated" and ch_name in STORAGE_CHANNELS:
+        try:
+            m = mediated_collective(op, nbytes, P, spec)
+        except KeyError:
+            return out
+        cost = ch.price(op, nbytes, P, mem_gib=mem_gib)
+        out.append(Candidate(op, ch_name, "storage", m.time, cost.total_usd))
+        return out
+    for algo in DIRECT_ALGOS.get(op, []):
+        if not feasible(op, algo, P):
+            continue
+        algo_depths = depths if (op, algo) in PIPELINEABLE else (1,)
+        for depth in algo_depths:
+            t = ch.time(op, algo, nbytes, P, depth=depth)
+            cost = ch.price(op, nbytes, P, algo=algo, mem_gib=mem_gib, time_s=t)
+            out.append(Candidate(op, ch_name, algo, t, cost.total_usd, depth=depth))
+    return out
+
+
+def _hier_candidates(op, nbytes, P, channels, inner_P, mem_gib):
+    """Two-level composites over ordered channel pairs (allreduce only —
+    the op hierarchical.py implements).  FaaS-priced channels (AWS
+    storage + direct TCP) are excluded: their per-function dollar model
+    doesn't compose with the chip-occupancy price composites are billed at,
+    and the storage ones have no round-schedule algorithms at all."""
+    from .hierarchical import hierarchical_time
+
+    if op != "allreduce":
+        return []
+    iP = inner_P if inner_P is not None else _default_inner(P)
+    if not iP or not (1 < iP < P) or P % iP:
+        return []
+    oP = P // iP
+    inner_rs = "recursive_halving" if is_pow2(iP) else "ring"
+    inner_ag = "recursive_doubling" if is_pow2(iP) else "ring"
+    legs = [
+        c for c in channels
+        if c not in FAAS_CHANNELS and get_channel(c).spec.kind != "provider"
+    ]  # provider (xla) shares ici's wire: composing it would duplicate rows
+    out = []
+    for ci in legs:
+        for co in legs:
+            if ci == co:
+                continue
+            # gamma: same reduce-compute basis the flat candidates pay
+            t = hierarchical_time(
+                nbytes, iP, oP, inner_channel=ci, outer_channel=co,
+                inner_rs=inner_rs, inner_ag=inner_ag, gamma=GAMMA_REDUCE,
+            )
+            # composite occupancy price: all P ranks are busy end-to-end
+            price = P * t * P_CHIP_S
+            out.append(
+                Candidate(op, f"{ci}+{co}", f"hier[{iP}x{oP}](rs+ar+ag)",
+                          t, price)
+            )
+    return out
+
+
 def candidates(
     op: str,
     nbytes: float,
     P: int,
-    channels: tuple[str, ...] = ("ici",),
+    channels: tuple[str, ...] | None = None,
     mem_gib: float = 2.0,
+    inner_P: int | None = None,
+    depths: tuple[int, ...] = PIPELINE_DEPTHS,
+    hierarchical: bool = True,
 ) -> list[Candidate]:
+    if channels is None:
+        channels = default_channels()
     out: list[Candidate] = []
     for ch_name in channels:
-        ch = CHANNELS[ch_name]
-        if ch.kind == "mediated" and ch_name in ("s3", "dynamodb", "redis"):
-            try:
-                m = mediated_collective(op, nbytes, P, ch)
-            except KeyError:
-                continue
-            cost = collective_cost(op, nbytes, P, ch_name, mem_gib=mem_gib)
-            out.append(Candidate(op, ch_name, "storage", m.time, cost.total_usd))
-            continue
-        for algo in DIRECT_ALGOS.get(op, []):
-            if not feasible(op, algo, P):
-                continue
-            t = collective_time(op, algo, nbytes, P, ch)
-            cost = collective_cost(op, nbytes, P, ch_name, algo=algo, mem_gib=mem_gib)
-            out.append(Candidate(op, ch_name, algo, t, cost.total_usd))
+        out.extend(_flat_candidates(op, nbytes, P, ch_name, mem_gib, depths))
+    if hierarchical and len(channels) > 1:
+        out.extend(_hier_candidates(op, nbytes, P, channels, inner_P, mem_gib))
     return out
 
 
@@ -74,12 +162,13 @@ def select(
     op: str,
     nbytes: float,
     P: int,
-    channels: tuple[str, ...] = ("ici",),
+    channels: tuple[str, ...] | None = None,
     objective: str = "time",
     mem_gib: float = 2.0,
     price_weight: float = 0.5,
+    inner_P: int | None = None,
 ) -> Candidate:
-    cands = candidates(op, nbytes, P, channels, mem_gib)
+    cands = candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P)
     if not cands:
         raise ValueError(f"no feasible algorithm for {op} with P={P} on {channels}")
     return min(cands, key=lambda c: c.objective(objective, price_weight))
@@ -89,16 +178,24 @@ def explain(
     op: str,
     nbytes: float,
     P: int,
-    channels: tuple[str, ...] = ("ici",),
+    channels: tuple[str, ...] | None = None,
     mem_gib: float = 2.0,
+    inner_P: int | None = None,
 ) -> str:
-    rows = sorted(candidates(op, nbytes, P, channels, mem_gib), key=lambda c: c.time_s)
+    """The full candidate table, best first.  ``channels=None`` considers
+    every registered channel with a transport (plus their hierarchical
+    composites) — the table ``dryrun.py --explain`` prints."""
+    rows = sorted(
+        candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P),
+        key=lambda c: c.time_s,
+    )
     lines = [
-        f"{'channel':10s} {'algorithm':20s} {'time':>12s} {'price $':>14s}",
-        "-" * 60,
+        f"{'channel':10s} {'algorithm':22s} {'depth':>5s} {'time':>12s} {'price $':>14s}",
+        "-" * 68,
     ]
     for c in rows:
         lines.append(
-            f"{c.channel:10s} {c.algorithm:20s} {c.time_s*1e6:10.1f}us {c.price_usd:14.3e}"
+            f"{c.channel:10s} {c.algorithm:22s} {c.depth:5d} "
+            f"{c.time_s*1e6:10.1f}us {c.price_usd:14.3e}"
         )
     return "\n".join(lines)

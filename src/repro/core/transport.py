@@ -13,7 +13,22 @@ once against the :class:`Transport` interface below and runs unchanged on
   counts** (including non-powers-of-two), counts rounds and per-rank bytes,
   and is the oracle for property tests and for validating the α-β cost
   models in :mod:`repro.core.models` (the counted rounds/bytes must match
-  the model exactly).
+  the model exactly), and
+* :class:`HostTransport` — a **mediated channel**: every message is staged
+  through a shared host-memory :class:`HostBroker` (PUT by the sender, GET
+  by the receiver), the TPU analogue of the paper's S3/Redis storage
+  channels.  Each logical exchange costs two serialized hops, which the
+  trace and the ``hops=2`` entry of its :class:`~repro.core.models.ChannelSpec`
+  both record.
+
+Pipelining
+----------
+``ppermute(..., overlap=True)`` marks a message as issued concurrently with
+the previous one (chunk-streamed pipelining: round ``k+1``'s send overlaps
+round ``k``'s reduce).  Overlapped messages still count toward ``rounds``
+and bytes, but merge into the previous **serialized slot** — so
+``trace.serial_rounds``/``trace.slot_bytes()`` expose the critical-path
+schedule the α-β model prices, while ``trace.rounds`` counts raw messages.
 
 SPMD convention
 ---------------
@@ -53,15 +68,20 @@ class Transport:
 
     size: int
     xp: Any  # numpy-like module
+    stacked: bool = False  # True: arrays carry a physical [P, ...] rank axis
 
     # -- identity ---------------------------------------------------------
     def rank(self):
         raise NotImplementedError
 
     # -- the single communication primitive --------------------------------
-    def ppermute(self, x, perm: Perm):
+    def ppermute(self, x, perm: Perm, overlap: bool = False):
         """Rank ``dst`` receives ``x`` from ``src`` for each ``(src, dst)``;
-        ranks that receive nothing get zeros (jax.lax.ppermute semantics)."""
+        ranks that receive nothing get zeros (jax.lax.ppermute semantics).
+
+        ``overlap=True`` declares that this message is pipelined behind the
+        previous one (no new serialized round on the instrumented channels;
+        a scheduling hint only on hardware channels)."""
         raise NotImplementedError
 
     # -- rank-masked helpers (shape-polymorphic between sim and jax) -------
@@ -124,7 +144,8 @@ class JaxTransport(Transport):
     def rank(self):
         return jax.lax.axis_index(self.axes if len(self.axes) > 1 else self.axes[0])
 
-    def ppermute(self, x, perm: Perm):
+    def ppermute(self, x, perm: Perm, overlap: bool = False):
+        # XLA schedules overlap itself; the flag is metadata on this channel.
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
         return jax.lax.ppermute(x, axis, perm)
 
@@ -160,22 +181,48 @@ class JaxTransport(Transport):
 
 @dataclass
 class ChannelTrace:
-    """What the α-β model needs: rounds and the max bytes any rank moved."""
+    """What the α-β model needs: rounds and the max bytes any rank moved.
+
+    ``rounds``/``per_round`` count every message; ``serial_rounds``/
+    ``per_slot`` group messages into serialized slots — an ``overlap=True``
+    message rides in the previous slot (its bytes occupy the link, but it
+    pays no fresh latency because it was issued while the previous round's
+    reduce was still running)."""
 
     rounds: int = 0
     bytes_per_rank: int = 0  # max over ranks of bytes *sent* (α-β convention)
     total_bytes: int = 0
     per_round: list = field(default_factory=list)
+    serial_rounds: int = 0
+    per_slot: list = field(default_factory=list)  # [[bytes, ...], ...]
+
+    def record(self, nbytes: int, participants: int, overlap: bool = False):
+        self.rounds += 1
+        self.bytes_per_rank += nbytes
+        self.total_bytes += nbytes * participants
+        self.per_round.append((nbytes, participants))
+        if overlap and self.per_slot:
+            self.per_slot[-1].append(nbytes)
+        else:
+            self.serial_rounds += 1
+            self.per_slot.append([nbytes])
+
+    def slot_bytes(self) -> list:
+        """Per serialized slot: total bytes the busiest rank pushed."""
+        return [sum(slot) for slot in self.per_slot]
 
     def time(self, alpha: float, beta: float) -> float:
-        """α-β time assuming full overlap across ranks within a round."""
-        return sum(alpha + b * beta for (b, _n) in self.per_round)
+        """α-β critical-path time: one latency per serialized slot, link
+        occupancy for every byte in the slot (overlapped messages stream
+        back-to-back behind the first)."""
+        return sum(alpha + b * beta for b in self.slot_bytes())
 
 
 class SimTransport(Transport):
     """All ranks in lockstep on stacked ``[P, *shape]`` numpy arrays."""
 
     xp = np
+    stacked = True
 
     def __init__(self, size: int):
         self.size = int(size)
@@ -192,18 +239,16 @@ class SimTransport(Transport):
     def rank(self):
         return np.arange(self.size)
 
-    def ppermute(self, x, perm: Perm):
+    def ppermute(self, x, perm: Perm, overlap: bool = False):
         out = np.zeros_like(x)
         max_sent = 0
         itemsize = x.dtype.itemsize
         per_msg = int(np.prod(x.shape[1:])) * itemsize
-        for src, dst in perm:
+        pairs = list(perm)
+        for src, dst in pairs:
             out[dst] = x[src]
             max_sent = max(max_sent, per_msg)
-        self.trace.rounds += 1
-        self.trace.bytes_per_rank += max_sent
-        self.trace.total_bytes += per_msg * len(list(perm))
-        self.trace.per_round.append((max_sent, len(list(perm))))
+        self.trace.record(max_sent, len(pairs), overlap=overlap)
         return out
 
     def _bcast_cond(self, cond, ref):
@@ -253,11 +298,90 @@ class SimTransport(Transport):
         return tuple(x.shape[1:])
 
     def tick(self, nbytes_per_rank: int, participants: int | None = None):
-        self.trace.rounds += 1
-        self.trace.bytes_per_rank += nbytes_per_rank
         n = participants if participants is not None else self.size
-        self.trace.total_bytes += nbytes_per_rank * n
-        self.trace.per_round.append((nbytes_per_rank, n))
+        self.trace.record(nbytes_per_rank, n)
+
+
+# ---------------------------------------------------------------------------
+# Mediated host channel: PUT/GET through a shared host-memory broker
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BrokerStats:
+    """Operation counts of the host broker (the mediated-channel analogue of
+    S3 request counts — what the price model bills)."""
+
+    puts: int = 0
+    gets: int = 0
+    polls: int = 0  # GET attempts before data was present (pull channel)
+    put_bytes: int = 0
+    get_bytes: int = 0
+    live_keys: int = 0
+    peak_keys: int = 0
+
+
+class HostBroker:
+    """Shared host-memory key-value store backing :class:`HostTransport`.
+
+    The paper's mediated channels (S3/DynamoDB/Redis) move every message
+    through a rendezvous store: the sender PUTs under a key both sides can
+    derive, the receiver polls and GETs.  This is the same object for the
+    TPU setting — a host-RAM staging dict shared by all ranks of one
+    process (multi-host deployments would back it with the real host
+    interconnect; the interface is what the channel model prices)."""
+
+    def __init__(self):
+        self._store: dict[Any, np.ndarray] = {}
+        self.stats = BrokerStats()
+
+    def put(self, key, value: np.ndarray):
+        if key in self._store:
+            raise KeyError(f"broker key collision: {key!r}")
+        self._store[key] = np.array(value, copy=True)
+        self.stats.puts += 1
+        self.stats.put_bytes += value.nbytes
+        self.stats.live_keys = len(self._store)
+        self.stats.peak_keys = max(self.stats.peak_keys, len(self._store))
+
+    def get(self, key) -> np.ndarray:
+        """One poll + one GET (pull semantics: the receiver asks)."""
+        self.stats.polls += 1
+        value = self._store.pop(key)
+        self.stats.gets += 1
+        self.stats.get_bytes += value.nbytes
+        self.stats.live_keys = len(self._store)
+        return value
+
+
+class HostTransport(SimTransport):
+    """Mediated transport: lockstep like :class:`SimTransport`, but every
+    ``ppermute`` stages each message through a :class:`HostBroker` — sender
+    PUT, receiver GET — so one logical exchange costs **two serialized
+    hops**.  The trace records both hops; ``ChannelSpec(hops=2)`` is the
+    matching α-β model (every α and β is paid twice: HBM→host, host→HBM)."""
+
+    def __init__(self, size: int, broker: HostBroker | None = None):
+        super().__init__(size)
+        self.broker = broker if broker is not None else HostBroker()
+        self._seq = 0  # per-transport round counter namespacing broker keys
+
+    def ppermute(self, x, perm: Perm, overlap: bool = False):
+        self._seq += 1
+        out = np.zeros_like(x)
+        per_msg = int(np.prod(x.shape[1:])) * x.dtype.itemsize
+        pairs = list(perm)
+        for src, dst in pairs:  # upload hop (all senders in parallel)
+            self.broker.put((id(self), self._seq, src, dst), x[src])
+        for src, dst in pairs:  # download hop (all receivers in parallel)
+            out[dst] = self.broker.get((id(self), self._seq, src, dst))
+        sent = per_msg if pairs else 0
+        # An overlapped segment's PUT rides the previous slot (issued while
+        # the previous segment reduces); its GET still serializes behind the
+        # PUT, so a depth-D pipelined exchange costs D+1 slots, not 2D.
+        self.trace.record(sent, len(pairs), overlap=overlap)  # PUT hop
+        self.trace.record(sent, len(pairs), overlap=False)  # GET hop
+        return out
 
 
 # ---------------------------------------------------------------------------

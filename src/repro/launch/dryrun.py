@@ -38,7 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from .. import configs
+from .. import compat, configs
 from ..core.models import V5E
 from ..models import lm
 from ..models.config import ModelConfig
@@ -320,7 +320,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str = "xla",
         lowered = step.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis(compiled)
         hlo = compiled.as_text()
 
     if hlo_out:
@@ -438,11 +438,18 @@ def main():
     args = ap.parse_args()
 
     if args.explain and args.arch:
-        from ..core.selector import explain
+        from ..core.selector import explain, select
 
         cfg = configs.get(args.arch)
         nbytes = lm.count_params(cfg) * 2 / 256  # bf16 grads per chip share
-        print(explain("allreduce", nbytes, 16, channels=("ici", "xla")))
+        # full registry table: direct ici, provider xla, mediated host, sim
+        # oracle — plus their two-level hierarchical composites
+        chans = ("ici", "xla", "host", "sim")
+        print(f"grad-sync allreduce, {nbytes/1e6:.1f} MB/chip, 16 ranks:\n")
+        print(explain("allreduce", nbytes, 16, channels=chans))
+        best = select("allreduce", nbytes, 16, channels=chans)
+        print(f"\nselected: {best.channel}/{best.algorithm} depth={best.depth} "
+              f"({best.time_s*1e6:.1f}us, ${best.price_usd:.3e})")
         return
 
     if args.all or args.grid:

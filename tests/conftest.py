@@ -1,0 +1,80 @@
+"""Test-environment compatibility shims.
+
+The property tests use ``hypothesis`` when it is installed.  The minimal CI
+container does not ship it, so this conftest installs a tiny deterministic
+stand-in implementing exactly the subset the suite uses (``given`` with
+keyword strategies, ``settings(max_examples, deadline)``,
+``strategies.integers`` / ``strategies.sampled_from``).  The stand-in draws
+a fixed pseudo-random sample per test, so runs are reproducible; installing
+the real hypothesis (``pip install fmi-repro[test]``) takes precedence.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+import random
+import sys
+import types
+
+if importlib.util.find_spec("hypothesis") is None:
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    def _integers(min_value: int = 0, max_value: int = 1 << 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    _DEFAULT_EXAMPLES = 25
+
+    def _given(**param_strategies):
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_stub_max_examples", _DEFAULT_EXAMPLES)
+                rng = random.Random(0xF31)  # deterministic across runs
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in param_strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorate
+
+    def _settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_ignored):
+        def decorate(fn):
+            fn._stub_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _st.just = _just
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    _hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    _hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

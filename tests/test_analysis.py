@@ -26,6 +26,9 @@ from repro.models import lm
 from repro.models.layers import NO_SHARD
 
 
+from repro.compat import cost_analysis as _cost_analysis
+
+
 def test_scan_counted_once_by_xla():
     w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
     x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
@@ -38,7 +41,7 @@ def test_scan_counted_once_by_xla():
                 return x
             return jax.lax.scan(lambda c, _: (jnp.tanh(c @ w), None), x, None,
                                 length=n)[0]
-        return jax.jit(f).lower(w, x).compile().cost_analysis()["flops"]
+        return _cost_analysis(jax.jit(f).lower(w, x).compile())["flops"]
 
     assert mk(8, True) > 7 * mk(8, False)  # scan body counted once
 
@@ -56,7 +59,7 @@ def test_analytic_flops_vs_unrolled_hlo(arch):
         logits, _, _ = lm.forward(params, cfg, NO_SHARD, batch)
         return logits
 
-    hlo_flops = jax.jit(fwd).lower(pshapes, bshapes).compile().cost_analysis()["flops"]
+    hlo_flops = _cost_analysis(jax.jit(fwd).lower(pshapes, bshapes).compile())["flops"]
     tokens = B * S
     analytic = (
         layer_flops_per_tok(cfg, S / 2, S) * cfg.n_layers * tokens
