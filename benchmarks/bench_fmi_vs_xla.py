@@ -20,16 +20,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import compat
 from repro.core import collectives as C
 from repro.core.communicator import Communicator
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",), auto_axes=True)
 comm = Communicator(axes=("data",), sizes=(8,))
 N = 1 << 16
 
 def timed(fn, x, reps=30):
-    with jax.set_mesh(mesh):
-        g = jax.jit(jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+    with compat.set_mesh(mesh):
+        g = jax.jit(compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
                     in_specs=P("data", None), out_specs=P("data", None),
                     axis_names={"data"}))
         out = g(x); jax.block_until_ready(out)  # compile+warm

@@ -11,6 +11,8 @@ Mapping to the paper:
     fmi_vs_xla   -> Figure 6   (FMI direct algorithms vs provider built-ins)
     overhead     -> Figure 7   (platform overhead: opaque vs locality-aware)
     kmeans       -> Figure 8/9 (distributed K-Means case study: time + cost)
+    overlap      -> blocking vs bucketed-overlap gradient sync sweep
+                    (docs/nonblocking.md; the PR-3 scheduler claim)
     kernels      -> Pallas kernel throughput vs naive references
     roofline     -> §Roofline reader over the dry-run artifacts
 """
@@ -28,6 +30,7 @@ BENCHES = [
     "fmi_vs_xla",
     "overhead",
     "kmeans",
+    "overlap",
     "kernels",
     "roofline",
 ]

@@ -2,9 +2,12 @@
 
 The repo targets current jax but must stay runnable on older releases
 (e.g. 0.4.37, where ``Compiled.cost_analysis()`` returns a one-element
-list of dicts instead of a dict, and ``jax.shard_map``/``jax.set_mesh``
-live under older names).  Version quirks get one shim here, used by both
-src and tests, so the next quirk is fixed in exactly one place.
+list of dicts instead of a dict, ``jax.shard_map``/``jax.set_mesh`` live
+under older names, ``jax.make_mesh`` has no ``axis_types``, and the Pallas
+TPU compiler-params class is ``TPUCompilerParams``).  Version quirks get
+one shim here, used by src, tests and benchmarks, so the next quirk is
+fixed in exactly one place.  CI runs the suite on both the oldest
+supported and the latest jax to keep these honest.
 """
 
 from __future__ import annotations
@@ -18,15 +21,50 @@ def cost_analysis(compiled) -> dict:
     return ca[0] if isinstance(ca, (list, tuple)) else ca
 
 
-def shard_map(fn, mesh, in_specs, out_specs, axis_names=None):
+def shard_map(fn, mesh=None, in_specs=None, out_specs=None, axis_names=None,
+              check_vma=None):
     """``jax.shard_map`` on current jax, ``jax.experimental.shard_map`` on
-    older releases (which infer axis names from the mesh)."""
+    older releases.
+
+    ``mesh=None`` uses the ambient mesh (current jax resolves it natively;
+    old jax reads the ``with mesh:`` context that :func:`set_mesh` installs
+    there).  ``axis_names``: the manual axes (the rest stay auto/GSPMD) —
+    on old jax this maps to the ``auto=`` complement set.  ``check_vma``
+    maps to the old ``check_rep``; it is forced off whenever auto axes are
+    present (old shard_map requires that)."""
     if hasattr(jax, "shard_map"):
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, axis_names=axis_names)
+        kwargs = {}
+        if mesh is not None:
+            kwargs["mesh"] = mesh
+        if axis_names is not None:
+            kwargs["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(fn, in_specs=in_specs, out_specs=out_specs,
+                             **kwargs)
     from jax.experimental.shard_map import shard_map as _shard_map
 
-    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if mesh is None:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh.empty:
+            raise ValueError(
+                "compat.shard_map: no mesh given and no ambient mesh — "
+                "call inside `with compat.set_mesh(mesh):`"
+            )
+    kwargs = {}
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kwargs["auto"] = auto
+    if check_vma is not None:
+        kwargs["check_rep"] = bool(check_vma) and not auto
+    elif auto:
+        kwargs["check_rep"] = False
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
 
 
 def set_mesh(mesh):
@@ -35,11 +73,24 @@ def set_mesh(mesh):
     return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
 
 
-def make_mesh(axis_shapes, axis_names, auto_axes: bool = False):
-    """``jax.make_mesh`` with ``axis_types`` only where it exists."""
+def make_mesh(axis_shapes, axis_names, auto_axes: bool = False, devices=None):
+    """``jax.make_mesh`` passing ``axis_types`` / ``devices`` only where
+    they exist."""
     kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
     if auto_axes and hasattr(jax.sharding, "AxisType"):
         kwargs["axis_types"] = tuple(
             jax.sharding.AxisType.Auto for _ in axis_names
         )
     return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def pallas_tpu_compiler_params(**kwargs):
+    """Pallas TPU compiler params across the ``CompilerParams`` /
+    ``TPUCompilerParams`` rename (imports pallas lazily: this module must
+    stay importable where pallas is unavailable)."""
+    import jax.experimental.pallas.tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

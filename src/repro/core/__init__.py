@@ -17,16 +17,21 @@ from . import (
     hierarchical,
     models,
     pricing,
+    requests,
+    scheduler,
     selector,
 )
 from .channels import Channel, get_channel, register_channel
 from .communicator import Communicator
+from .requests import Request, RequestQueue, waitall
+from .scheduler import CommScheduler
 from .transport import (
     ChannelTrace,
     HostBroker,
     HostTransport,
     JaxTransport,
     SimTransport,
+    TransportRequest,
 )
 
 __all__ = [
@@ -39,6 +44,11 @@ __all__ = [
     "HostTransport",
     "HostBroker",
     "ChannelTrace",
+    "TransportRequest",
+    "Request",
+    "RequestQueue",
+    "CommScheduler",
+    "waitall",
     "algorithms",
     "channels",
     "collectives",
@@ -46,5 +56,7 @@ __all__ = [
     "hierarchical",
     "models",
     "pricing",
+    "requests",
+    "scheduler",
     "selector",
 ]

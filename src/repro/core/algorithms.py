@@ -194,11 +194,13 @@ def allreduce_ring(t: Transport, x, op="add"):
 # Chunk-streamed (pipelined) bandwidth-class algorithms
 #
 # Each reducing round's payload is split into ``depth`` contiguous segments;
-# segment j+1 is sent (``overlap=True``) while segment j's reduce runs, so
-# the serialized-round count stays at the unpipelined schedule length while
-# per-segment reduce latency leaves the critical path.  The arithmetic is
-# the *same elementwise operations in the same order* as the unpipelined
-# algorithm — results are bit-exact, which the sim-oracle tests assert.
+# all segments are *issued* with ``ppermute_start`` before any is waited on,
+# so segment j+1's send overlaps segment j's reduce — the serialized-round
+# count stays at the unpipelined schedule length (the trace's pending-slot
+# accounting merges the in-flight segments into one slot) while per-segment
+# reduce latency leaves the critical path.  The arithmetic is the *same
+# elementwise operations in the same order* as the unpipelined algorithm —
+# results are bit-exact, which the sim-oracle tests assert.
 # ---------------------------------------------------------------------------
 
 
@@ -232,12 +234,14 @@ def ring_reduce_scatter_pipelined(t: Transport, x, op="add", depth: int = 2):
         recv_idx = (r - i - 1) % P
         send = t.dynslice(chunks, send_idx, 1, axis=0)
         cur = t.dynslice(chunks, recv_idx, 1, axis=0)
+        reqs = [
+            t.ppermute_start(t.dynslice(send, lo, sz, axis=1), ring)
+            for lo, sz in spans
+        ]  # all segments in flight before the first reduce
         pieces = []
-        for j, (lo, sz) in enumerate(spans):
-            sseg = t.dynslice(send, lo, sz, axis=1)
-            rseg = t.ppermute(sseg, ring, overlap=j > 0)
+        for (lo, sz), req in zip(spans, reqs):
             cseg = t.dynslice(cur, lo, sz, axis=1)
-            pieces.append(opf(cseg, rseg))
+            pieces.append(opf(cseg, req.wait()))
         chunks = t.dynupdate(chunks, t.concat(pieces, axis=1), recv_idx, axis=0)
     own = (r + 1) % P
     return _chunk_squeeze(t, t.dynslice(chunks, own, 1, axis=0), None)
@@ -275,12 +279,14 @@ def halving_reduce_scatter_pipelined(t: Transport, x, op="add", depth: int = 2):
         keep_start = t.where(i_am_low, 0, half)
         send = t.dynslice(window, send_start, half, axis=0)
         keep = t.dynslice(window, keep_start, half, axis=0)
+        reqs = [
+            t.ppermute_start(t.dynslice(send, lo, sz, axis=1), pairs)
+            for lo, sz in spans
+        ]  # all segments in flight before the first reduce
         pieces = []
-        for j, (lo, sz) in enumerate(spans):
-            sseg = t.dynslice(send, lo, sz, axis=1)
-            rseg = t.ppermute(sseg, pairs, overlap=j > 0)
+        for (lo, sz), req in zip(spans, reqs):
             kseg = t.dynslice(keep, lo, sz, axis=1)
-            pieces.append(opf(kseg, rseg))
+            pieces.append(opf(kseg, req.wait()))
         window = t.concat(pieces, axis=1)
         length = half
     return _chunk_squeeze(t, window, None)

@@ -239,27 +239,66 @@ def barrier(comm: Communicator):
 
 def allreduce_tree(tree, comm: Communicator, op="add", algorithm="auto",
                    objective="time", mean: bool = False,
-                   pipeline: int | None = None):
-    """Allreduce a pytree (e.g. gradients): leaves are grouped by dtype,
-    raveled and fused into one payload per dtype (communication bucketing),
-    reduced with one collective each, then split back.  ``mean=True``
-    divides by the communicator size (data-parallel gradient averaging)."""
+                   pipeline: int | None = None,
+                   schedule: str = "blocking",
+                   bucket_bytes: int | None = None,
+                   compute_s: float = 0.0):
+    """Allreduce a pytree (e.g. gradients).
+
+    ``schedule='blocking'``: leaves are grouped by dtype, raveled and fused
+    into one payload per dtype, reduced with one collective each, then
+    split back.  ``schedule='bucketed'``: leaves are fed through a
+    :class:`~repro.core.scheduler.CommScheduler` in backward order —
+    coalesced into α-β-model-sized buckets (``bucket_bytes`` pins the size;
+    None lets ``selector.bucket_plan`` choose it from the total payload and
+    the ``compute_s`` overlap window) and issued as nonblocking requests.
+    ``mean=True`` divides by the communicator size (data-parallel gradient
+    averaging)."""
     if comm.size == 1:
         return tree
+    if schedule == "bucketed":
+        from .scheduler import CommScheduler
+
+        total = sum(
+            int(math.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(tree)
+        )
+        if comm.transport().stacked:
+            total //= comm.size  # planner prices the logical per-rank payload
+        sched = CommScheduler(
+            comm, op=op, mean=mean, algorithm=algorithm, objective=objective,
+            bucket_bytes=bucket_bytes, total_bytes_hint=total,
+            compute_s=compute_s,
+        )
+        return sched.sync_tree(tree)
+    if schedule != "blocking":
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         "expected 'blocking' or 'bucketed'")
     leaves, treedef = jax.tree.flatten(tree)
     by_dtype: dict[Any, list[int]] = {}
     for i, leaf in enumerate(leaves):
         by_dtype.setdefault(leaf.dtype, []).append(i)
     out = list(leaves)
+    t = comm.transport()
     for dtype, idxs in by_dtype.items():
-        flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
+        if t.stacked:  # software transports: leaves carry a [P, ...] axis
+            flat = t.xp.concatenate(
+                [t.xp.reshape(t.xp.asarray(leaves[i]), (t.size, -1)) for i in idxs],
+                axis=1,
+            )
+        else:
+            flat = jnp.concatenate([leaves[i].reshape(-1) for i in idxs])
         red = allreduce(flat, comm, op=op, algorithm=algorithm, objective=objective,
                         pipeline=pipeline)
         if mean:
             red = red / comm.size
         off = 0
         for i in idxs:
-            n = math.prod(leaves[i].shape)
-            out[i] = jax.lax.dynamic_slice_in_dim(red, off, n).reshape(leaves[i].shape)
+            if t.stacked:
+                n = math.prod(leaves[i].shape) // t.size
+                out[i] = red[:, off:off + n].reshape(leaves[i].shape)
+            else:
+                n = math.prod(leaves[i].shape)
+                out[i] = jax.lax.dynamic_slice_in_dim(red, off, n).reshape(leaves[i].shape)
             off += n
     return jax.tree.unflatten(treedef, out)

@@ -117,3 +117,42 @@ class Communicator:
         from . import collectives as C
 
         return C.barrier(self)
+
+    # ------------------------------------------------------------------
+    # Nonblocking requests (MPI_I*-flavoured; see repro.core.requests)
+    # ------------------------------------------------------------------
+    def iallreduce(self, x, op="add", algorithm="auto", objective="time"):
+        from . import requests as R
+
+        return R.iallreduce(x, self, op=op, algorithm=algorithm,
+                            objective=objective)
+
+    def ireduce_scatter(self, x, op="add", algorithm="auto"):
+        from . import requests as R
+
+        return R.ireduce_scatter(x, self, op=op, algorithm=algorithm)
+
+    def iallgather(self, chunk, algorithm="auto"):
+        from . import requests as R
+
+        return R.iallgather(chunk, self, algorithm=algorithm)
+
+    def isend(self, x, transport, pairs, tag=0):
+        """Sender half of a tag-matched p2p exchange on ``transport`` (one
+        transport instance must be shared by the matching :meth:`irecv` —
+        the mailbox lives on it)."""
+        from . import requests as R
+
+        return R.isend(x, transport, pairs, tag=tag)
+
+    def irecv(self, transport, tag=0):
+        from . import requests as R
+
+        return R.irecv(transport, tag=tag)
+
+    def scheduler(self, **kwargs):
+        """A :class:`~repro.core.scheduler.CommScheduler` bound to this
+        communicator (bucketed nonblocking gradient sync)."""
+        from .scheduler import CommScheduler
+
+        return CommScheduler(self, **kwargs)

@@ -1,0 +1,244 @@
+"""MPI-style nonblocking request layer (the half of MPI the blocking
+collectives in :mod:`repro.core.collectives` still lacked).
+
+The paper models FMI's interface after MPI; rFaaS (arXiv 2106.13859) shows
+request-style async messaging is what makes high-performance FaaS viable,
+and FSD-Inference (arXiv 2403.15195) that serverless ML wins hinge on
+overlapping communication with compute.  This module is the enabling
+abstraction: every collective gets an ``i``-prefixed variant returning a
+:class:`Request` —
+
+    req = iallreduce(x, comm)          # issued, in flight
+    ...  compute while the bytes move ...
+    y = req.wait()                     # completed
+
+``wait``/``test``/``waitall`` follow MPI semantics.  On :class:`JaxTransport`
+the issue/wait split is a scheduling hint (XLA overlaps whatever the data
+dependencies allow — issue order in the traced graph is the hint); a
+collective-level Request therefore executes at issue time and ``wait`` is
+the ordering point (see :func:`_issue`).  At the *transport* level
+(``ppermute_start`` / :func:`isend`/:func:`irecv`) the split additionally
+drives the instrumented trace's pending-slot accounting, so the modeled
+overlap there is *observed*, not asserted.
+
+Point-to-point (``isend``/``irecv``) is expressed SPMD-style: both sides of
+the exchange name the full ``(src, dst)`` pair list (rank-dependent control
+flow is masks, never python ``if`` — the repo-wide convention), and a
+``tag`` matches the send to its receive through the transport mailbox:
+
+    isend(x, t, pairs, tag=3)          # sender half: injects the message
+    req = irecv(t, tag=3)              # receiver half: Request for the data
+    y = req.wait()
+
+:class:`RequestQueue` is the drain-side helper the
+:class:`~repro.core.scheduler.CommScheduler` builds buckets on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+from .transport import Perm, Transport, TransportRequest
+
+
+class Request:
+    """Handle for one in-flight nonblocking operation.
+
+    Carries the op metadata the scheduler and the cost model want
+    (``op``, ``nbytes``, user ``tag``) plus one of:
+
+    * an immediate ``result`` (ops that complete at issue, e.g. on jax);
+    * a ``transport_req`` (:class:`TransportRequest`) whose ``wait`` closes
+      the instrumented channel's pending slot;
+    * a deferred ``thunk`` executed at completion time.
+
+    ``finalize`` (if given) post-processes the raw completion value exactly
+    once — e.g. unpadding a fused bucket back into leaves."""
+
+    def __init__(self, op: str = "op", nbytes: int = 0, tag: Any = None, *,
+                 result: Any = None,
+                 transport_req: TransportRequest | None = None,
+                 thunk: Callable[[], Any] | None = None,
+                 finalize: Callable[[Any], Any] | None = None):
+        self.op = op
+        self.nbytes = int(nbytes)
+        self.tag = tag
+        self._result = result
+        self._treq = transport_req
+        self._thunk = thunk
+        self._finalize = finalize
+        self._done = transport_req is None and thunk is None and finalize is None
+        if not self._done and transport_req is None and thunk is None:
+            # eager result whose finalize must still run at completion time
+            self._thunk = lambda: result
+
+    def test(self) -> bool:
+        """True iff the operation has completed (never blocks)."""
+        if not self._done and self._treq is not None and self._treq.test():
+            self._complete(self._treq._result)
+        return self._done
+
+    def wait(self):
+        """Block until complete; returns the operation's result.  Idempotent
+        — later calls return the same result."""
+        if not self._done:
+            if self._treq is not None:
+                self._complete(self._treq.wait())
+            else:
+                thunk, self._thunk = self._thunk, None
+                self._complete(thunk())
+        return self._result
+
+    def _complete(self, value):
+        if self._finalize is not None:
+            fin, self._finalize = self._finalize, None
+            value = fin(value)
+        self._result, self._treq, self._thunk = value, None, None
+        self._done = True
+
+
+def wait(req: Request):
+    return req.wait()
+
+
+def test(req: Request) -> bool:
+    return req.test()
+
+
+def waitall(reqs: Sequence[Request]) -> list:
+    """Complete every request; results in *request* order (MPI_Waitall),
+    regardless of the order completions actually happen in."""
+    return [r.wait() for r in reqs]
+
+
+class RequestQueue:
+    """FIFO of in-flight requests with MPI-flavoured drain helpers.
+
+    The scheduler pushes one request per issued bucket and drains the queue
+    at the end of the step; ``waitall`` preserves issue order so unpacking
+    is deterministic."""
+
+    def __init__(self):
+        self._reqs: list[Request] = []
+
+    def push(self, req: Request) -> Request:
+        self._reqs.append(req)
+        return req
+
+    def __len__(self) -> int:
+        return len(self._reqs)
+
+    def __iter__(self):
+        return iter(self._reqs)
+
+    @property
+    def pending(self) -> int:
+        return sum(0 if r.test() else 1 for r in self._reqs)
+
+    def waitall(self) -> list:
+        """Drain the queue: complete everything, return results in issue
+        order, and empty the queue."""
+        out = waitall(self._reqs)
+        self._reqs = []
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Nonblocking collectives — issue now, Request completes later
+# ---------------------------------------------------------------------------
+
+
+def _issue(op: str, nbytes: int, run: Callable[[], Any],
+           finalize: Callable[[Any], Any] | None = None) -> Request:
+    """All our transports move the bytes at issue time (lockstep software
+    channels) or leave scheduling to XLA (mesh channels), so the collective
+    executes here and the Request carries the finished value; ``wait`` is
+    the synchronization point the caller orders the program around (and
+    where ``finalize`` — e.g. bucket unpacking — runs)."""
+    return Request(op, nbytes, result=run(), finalize=finalize)
+
+
+def _payload_bytes(x) -> int:
+    import math
+
+    size = 1
+    for d in getattr(x, "shape", ()):  # 0-d arrays: empty shape -> 1
+        size *= int(d)
+    return size * x.dtype.itemsize if hasattr(x, "dtype") else int(size)
+
+
+def iallreduce(x, comm, op="add", algorithm="auto", objective="time",
+               pipeline: int | None = None,
+               finalize: Callable[[Any], Any] | None = None) -> Request:
+    """Nonblocking allreduce of ``x`` over ``comm`` → :class:`Request`."""
+    from . import collectives as C
+
+    return _issue("allreduce", _payload_bytes(x),
+                  lambda: C.allreduce(x, comm, op=op, algorithm=algorithm,
+                                      objective=objective, pipeline=pipeline),
+                  finalize=finalize)
+
+
+def ireduce_scatter(x, comm, op="add", algorithm="auto",
+                    pipeline: int | None = None,
+                    finalize: Callable[[Any], Any] | None = None) -> Request:
+    """Nonblocking reduce-scatter → Request for this rank's reduced chunk."""
+    from . import collectives as C
+
+    return _issue("reduce_scatter", _payload_bytes(x),
+                  lambda: C.reduce_scatter(x, comm, op=op, algorithm=algorithm,
+                                           pipeline=pipeline),
+                  finalize=finalize)
+
+
+def iallgather(chunk, comm, algorithm="auto",
+               finalize: Callable[[Any], Any] | None = None) -> Request:
+    """Nonblocking allgather → Request for the full concatenated buffer."""
+    from . import collectives as C
+
+    return _issue("allgather", _payload_bytes(chunk),
+                  lambda: C.allgather(chunk, comm, algorithm=algorithm),
+                  finalize=finalize)
+
+
+# ---------------------------------------------------------------------------
+# Point-to-point — SPMD pair-list convention, tag-matched via a mailbox
+# ---------------------------------------------------------------------------
+
+def _mailbox(t: Transport) -> dict:
+    """Tag → in-flight :class:`TransportRequest`, stored on the transport
+    itself so the mailbox's lifetime is the transport's (a global registry
+    keyed by ``id(t)`` would leak unmatched sends and could hand a new
+    transport a dead one's messages after id reuse)."""
+    box = getattr(t, "_fmi_mailbox", None)
+    if box is None:
+        box = t._fmi_mailbox = {}
+    return box
+
+
+def isend(x, t: Transport, pairs: Perm, tag: Any = 0) -> Request:
+    """Sender half of a nonblocking point-to-point exchange: inject ``x``
+    along ``pairs`` on transport ``t``.  The matching :func:`irecv` (same
+    transport, same ``tag``) yields the data.  The returned Request's
+    ``wait`` is send-completion (buffer reusable) — it does NOT imply the
+    receive finished."""
+    box = _mailbox(t)
+    if tag in box:
+        raise ValueError(f"isend tag collision: {tag!r} already in flight")
+    box[tag] = t.ppermute_start(x, pairs)
+    return Request("send", _payload_bytes(x), tag, result=None)
+
+
+def irecv(t: Transport, tag: Any = 0) -> Request:
+    """Receiver half: Request completing with the payload a matching
+    :func:`isend` injected under ``tag``.  Waiting the receive closes the
+    channel's pending slot (the GET hop on mediated transports)."""
+    box = _mailbox(t)
+    try:
+        treq = box.pop(tag)
+    except KeyError:
+        raise ValueError(
+            f"irecv with no matching isend for tag {tag!r} (in flight: "
+            f"{sorted(map(repr, box))})"
+        ) from None
+    return Request("recv", 0, tag, transport_req=treq)

@@ -1,0 +1,196 @@
+"""Model-driven communication scheduler: coalesce, issue, drain with overlap.
+
+The training stack produces many small tensors (per-layer gradients) that
+all need the same collective.  Calling the collective per tensor pays the
+channel latency α once per layer; fusing everything into one payload (the
+blocking ``allreduce_tree``) pays α once but serializes the entire wire
+time *after* the last gradient is ready.  The :class:`CommScheduler` sits
+between the two extremes:
+
+* tensors are **submitted** as they become ready (backward order),
+* they coalesce into per-dtype **buckets** whose size the selector picks
+  from the channel's α-β(+γ) model (:func:`repro.core.selector.bucket_plan`
+  — latency-bound → fuse, bandwidth-bound with compute to hide behind →
+  split),
+* each full bucket is **issued** immediately as a nonblocking collective
+  (:func:`repro.core.requests.iallreduce`), overlapping the rest of the
+  backward pass,
+* ``drain()`` waits the request queue and scatters results back to the
+  submitted names.
+
+The arithmetic per element is identical to the blocking path for the
+rank-order-independent algorithms (recursive doubling / Rabenseifner):
+bucketing changes *which payload* an element travels in, not the reduction
+tree over ranks — so bucketed and blocking results are bit-exact, which
+``tests/test_requests.py`` asserts on both the sim and mesh transports.
+(Ring rotates each chunk's rank order with its position, so ring results
+agree only up to float associativity.)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+from .communicator import Communicator
+from .requests import Request, RequestQueue, iallreduce
+from .selector import BucketPlan, bucket_plan
+
+#: Fallback bucket size when the caller gives neither ``bucket_bytes`` nor
+#: a total-payload hint for the planner (25 MB — torch.DDP's default).
+DEFAULT_BUCKET_BYTES = 25 * 1000 * 1000
+
+
+class CommScheduler:
+    """Bucketed nonblocking gradient synchronization over one communicator.
+
+    Usage (inside the train step)::
+
+        sched = CommScheduler(comm, op="add", mean=True,
+                              total_bytes_hint=grad_bytes,
+                              compute_s=modeled_backward_s)
+        for name, g in reversed(list(flat_grads.items())):   # backward order
+            sched.submit(name, g)
+        reduced = sched.drain()                              # {name: tensor}
+
+    ``bucket_bytes`` pins the bucket size explicitly; otherwise it comes
+    from :func:`selector.bucket_plan` over ``total_bytes_hint`` (the plan is
+    kept on ``self.plan`` for introspection/`--explain`).  Buckets never mix
+    dtypes — mixing would force casts and change bits vs. the blocking
+    per-dtype fused path.
+    """
+
+    def __init__(self, comm: Communicator, op: str = "add",
+                 mean: bool = False, algorithm: str = "auto",
+                 objective: str = "time",
+                 bucket_bytes: int | None = None,
+                 total_bytes_hint: int | None = None,
+                 compute_s: float = 0.0,
+                 queue: RequestQueue | None = None):
+        self.comm = comm
+        self.op = op
+        self.mean = mean
+        self.algorithm = algorithm
+        self.objective = objective
+        self.queue = queue if queue is not None else RequestQueue()
+        self.plan: BucketPlan | None = None
+        if bucket_bytes is None and total_bytes_hint:
+            self.plan = bucket_plan(
+                "allreduce", total_bytes_hint, comm.size,
+                channels=(comm.channel,), objective=objective,
+                compute_s=compute_s,
+            )
+            bucket_bytes = self.plan.bucket_bytes
+        self.bucket_bytes = int(bucket_bytes or DEFAULT_BUCKET_BYTES)
+        # per-dtype open bucket: dtype -> list of (name, tensor)
+        self._open: dict[Any, list[tuple[str, Any]]] = {}
+        self._open_bytes: dict[Any, int] = {}
+        self._results: dict[str, Any] = {}
+        self._submitted: set[str] = set()  # names of this cycle, incl. in-flight
+        self._stacked: bool | None = None  # resolved lazily from transport
+
+    # -- helpers -----------------------------------------------------------
+    def _transport_layout(self):
+        if self._stacked is None:
+            t = self.comm.transport()
+            self._stacked = bool(t.stacked)
+            self._xp = t.xp
+            self._size = t.size
+        return self._stacked
+
+    def _lbytes(self, x) -> int:
+        """Logical per-rank payload bytes (stacked software transports carry
+        a physical [P, ...] rank axis the model must not count)."""
+        n = int(math.prod(x.shape)) * x.dtype.itemsize
+        return n // self._size if self._transport_layout() else n
+
+    def _ravel(self, x):
+        if self._transport_layout():
+            return self._xp.reshape(self._xp.asarray(x), (self._size, -1))
+        return x.reshape(-1)
+
+    def _concat(self, parts):
+        if self._transport_layout():
+            return self._xp.concatenate(parts, axis=1)
+        import jax.numpy as jnp
+
+        return jnp.concatenate(parts)
+
+    def _slice_flat(self, flat, off, n):
+        if self._transport_layout():
+            return flat[:, off:off + n]
+        import jax
+
+        return jax.lax.dynamic_slice_in_dim(flat, off, n)
+
+    # -- public API --------------------------------------------------------
+    def submit(self, name: str, tensor) -> None:
+        """Hand one ready tensor to the scheduler.  Issues the open bucket
+        as soon as it reaches the planned size."""
+        if name in self._submitted:  # open, in-flight, or already completed
+            raise ValueError(f"duplicate submit: {name!r}")
+        self._submitted.add(name)
+        if self.comm.size == 1:
+            self._results[name] = tensor
+            return
+        dt = tensor.dtype
+        self._open.setdefault(dt, []).append((name, tensor))
+        self._open_bytes[dt] = self._open_bytes.get(dt, 0) + self._lbytes(tensor)
+        if self._open_bytes[dt] >= self.bucket_bytes:
+            self._issue_bucket(dt)
+
+    def flush(self) -> None:
+        """Issue every open bucket regardless of fill level."""
+        for dt in list(self._open):
+            if self._open[dt]:
+                self._issue_bucket(dt)
+
+    def drain(self) -> dict[str, Any]:
+        """Flush, wait all in-flight requests (issue order), and return
+        ``{name: reduced tensor}`` for everything submitted so far."""
+        self.flush()
+        self.queue.waitall()  # each request's finalize fills self._results
+        out, self._results = self._results, {}
+        self._submitted.clear()  # names are reusable in the next cycle
+        return out
+
+    def sync_tree(self, tree):
+        """Bucketed analogue of ``collectives.allreduce_tree``: submit the
+        leaves in backward (reverse) order — the order gradients become
+        ready in — drain, and rebuild the pytree."""
+        import jax
+
+        if self.comm.size == 1:
+            return tree
+        leaves, treedef = jax.tree.flatten(tree)
+        for i in reversed(range(len(leaves))):
+            self.submit(str(i), leaves[i])
+        reduced = self.drain()
+        return jax.tree.unflatten(treedef, [reduced[str(i)] for i in range(len(leaves))])
+
+    # -- internals ---------------------------------------------------------
+    def _issue_bucket(self, dt) -> Request:
+        bucket = self._open.pop(dt)
+        self._open_bytes.pop(dt, None)
+        names = [n for n, _ in bucket]
+        shapes = [t.shape for _, t in bucket]
+        flats = [self._ravel(t) for _, t in bucket]
+        axis = 1 if self._transport_layout() else 0
+        sizes = [f.shape[axis] for f in flats]
+        fused = self._concat(flats)
+        P = self.comm.size
+
+        def unpack(reduced):
+            off = 0
+            for name, shape, n in zip(names, shapes, sizes):
+                piece = self._slice_flat(reduced, off, n)
+                if self.mean:
+                    piece = piece / P  # same float op as the blocking path
+                self._results[name] = piece.reshape(shape)
+                off += n
+            return reduced
+
+        req = iallreduce(fused, self.comm, op=self.op,
+                         algorithm=self.algorithm, objective=self.objective,
+                         finalize=unpack)
+        return self.queue.push(req)

@@ -25,6 +25,7 @@ channel there makes it a selector candidate with no change here.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 from .channels import default_channels, get_channel
@@ -172,6 +173,135 @@ def select(
     if not cands:
         raise ValueError(f"no feasible algorithm for {op} with P={P} on {channels}")
     return min(cands, key=lambda c: c.objective(objective, price_weight))
+
+
+# ---------------------------------------------------------------------------
+# Bucket planning — how big should a fused communication bucket be?
+# ---------------------------------------------------------------------------
+
+# Candidate bucket sizes the planner prices (powers of two, 256 KiB..128 MiB);
+# the full payload (one bucket) is always also a candidate.
+BUCKET_SIZES: tuple[int, ...] = tuple((1 << 18) << k for k in range(10))
+
+
+@dataclass(frozen=True)
+class BucketPlan:
+    """The selector's answer to "how should many small tensors be fused?"
+
+    ``candidate`` is the best (channel, algorithm, depth) at the per-bucket
+    payload size; ``time_s`` is the modeled *exposed* time of draining all
+    ``n_buckets`` with overlap: every bucket but the last can hide behind
+    the ``compute_s`` window it was issued under (gradients keep becoming
+    ready while earlier buckets drain), the last bucket is always exposed.
+    """
+
+    op: str
+    total_bytes: float
+    P: int
+    bucket_bytes: int
+    n_buckets: int
+    candidate: Candidate
+    per_bucket_time_s: float
+    time_s: float
+    price_usd: float
+    compute_s: float = 0.0
+
+
+def _exposed_time(n: int, t_bucket: float, compute_s: float) -> float:
+    """Critical path of draining ``n`` buckets of per-bucket time
+    ``t_bucket`` issued across a ``compute_s``-long producer window: the
+    first ``n-1`` buckets overlap whatever compute remains, the last cannot
+    (it is only ready when the producer finishes)."""
+    return max(compute_s, (n - 1) * t_bucket) + t_bucket
+
+
+def bucket_plan(
+    op: str,
+    total_bytes: float,
+    P: int,
+    channels: tuple[str, ...] | None = None,
+    objective: str = "time",
+    mem_gib: float = 2.0,
+    compute_s: float = 0.0,
+    bucket_sizes: tuple[int, ...] = BUCKET_SIZES,
+    price_weight: float = 0.5,
+) -> BucketPlan:
+    """Choose the bucket size for coalescing a ``total_bytes`` payload that
+    becomes ready incrementally (per-layer gradients) into fused collectives.
+
+    The α-β trade the plan encodes: **latency-bound** payloads (small, or a
+    high-α channel) want few big buckets — every extra bucket pays the full
+    per-collective latency again; **bandwidth-bound** payloads with compute
+    to hide behind (``compute_s > 0``) want smaller buckets — only the last
+    bucket's wire time is exposed once the rest overlap the producer.  With
+    ``compute_s == 0`` the plan degenerates to a single fused bucket (pure
+    serialized α-β time is minimized by paying α once), which is exactly
+    the blocking ``allreduce_tree`` behaviour.
+    """
+    total = max(1.0, float(total_bytes))
+    sizes = sorted({int(b) for b in bucket_sizes if 0 < b < total} | {int(total)})
+    best: BucketPlan | None = None
+    for B in sizes:
+        n = max(1, int(math.ceil(total / B)))
+        per_bucket = total / n  # even split (the scheduler pads the tail)
+        cand = select(op, per_bucket, P, channels=channels,
+                      objective=objective, mem_gib=mem_gib,
+                      price_weight=price_weight)
+        t = _exposed_time(n, cand.time_s, compute_s)
+        price = n * cand.price_usd
+        plan = BucketPlan(op, total, P, B, n, cand, cand.time_s, t, price,
+                          compute_s)
+        key = {"time": t, "price": price,
+               "weighted": (1 - price_weight) * t + price_weight * price}[objective]
+        best_key = None if best is None else {
+            "time": best.time_s, "price": best.price_usd,
+            "weighted": (1 - price_weight) * best.time_s
+            + price_weight * best.price_usd,
+        }[objective]
+        if best is None or key < best_key:
+            best = plan
+    assert best is not None
+    return best
+
+
+def explain_bucket_plan(
+    op: str,
+    total_bytes: float,
+    P: int,
+    channels: tuple[str, ...] | None = None,
+    compute_s: float = 0.0,
+    bucket_sizes: tuple[int, ...] = BUCKET_SIZES,
+) -> str:
+    """Full bucket-size table, chosen row marked — what
+    ``launch/dryrun.py --explain`` prints under the flat candidate table."""
+    total = max(1.0, float(total_bytes))
+    chosen = bucket_plan(op, total, P, channels=channels, compute_s=compute_s,
+                         bucket_sizes=bucket_sizes)
+    sizes = sorted({int(b) for b in bucket_sizes if 0 < b < total} | {int(total)})
+    lines = [
+        f"bucket plan: {op}, {total/1e6:.1f} MB total, P={P}, "
+        f"overlap window {compute_s*1e3:.2f} ms",
+        f"{'':2s}{'bucket':>10s} {'n':>4s} {'channel':10s} {'algorithm':20s} "
+        f"{'depth':>5s} {'t/bucket':>10s} {'exposed':>10s} {'price $':>12s}",
+        "-" * 90,
+    ]
+    for B in sizes:
+        n = max(1, int(math.ceil(total / B)))
+        cand = select(op, total / n, P, channels=channels)
+        t = _exposed_time(n, cand.time_s, compute_s)
+        mark = "*" if B == chosen.bucket_bytes else " "
+        lines.append(
+            f"{mark:2s}{B/1e6:8.2f}MB {n:4d} {cand.channel:10s} "
+            f"{cand.algorithm:20s} {cand.depth:5d} {cand.time_s*1e6:8.1f}us "
+            f"{t*1e6:8.1f}us {n*cand.price_usd:12.3e}"
+        )
+    lines.append(
+        f"-> bucket={chosen.bucket_bytes/1e6:.2f}MB x{chosen.n_buckets} on "
+        f"{chosen.candidate.channel}/{chosen.candidate.algorithm} "
+        f"depth={chosen.candidate.depth}: exposed {chosen.time_s*1e6:.1f}us, "
+        f"${chosen.price_usd:.3e}"
+    )
+    return "\n".join(lines)
 
 
 def explain(

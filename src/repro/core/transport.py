@@ -21,14 +21,22 @@ once against the :class:`Transport` interface below and runs unchanged on
   trace and the ``hops=2`` entry of its :class:`~repro.core.models.ChannelSpec`
   both record.
 
-Pipelining
-----------
-``ppermute(..., overlap=True)`` marks a message as issued concurrently with
-the previous one (chunk-streamed pipelining: round ``k+1``'s send overlaps
-round ``k``'s reduce).  Overlapped messages still count toward ``rounds``
-and bytes, but merge into the previous **serialized slot** — so
+Nonblocking contract
+--------------------
+The single communication primitive is split MPI-style into an issue half
+and a completion half: ``ppermute_start(x, perm)`` injects the message and
+returns a :class:`TransportRequest`; ``request.wait()`` yields the received
+payload.  Blocking ``ppermute`` is just ``ppermute_start(...).wait()``.
+
+A message *started while earlier requests are still pending* is pipelined
+behind them (chunk-streamed pipelining: round ``k+1``'s send overlaps round
+``k``'s reduce).  Pending-issued messages still count toward ``rounds`` and
+bytes, but merge into the open **serialized slot** — so
 ``trace.serial_rounds``/``trace.slot_bytes()`` expose the critical-path
 schedule the α-β model prices, while ``trace.rounds`` counts raw messages.
+The trace's pending-slot accounting replaces the old ``overlap=`` flag:
+overlap is no longer asserted by the caller, it is *observed* from the
+issue/wait order of requests.
 
 SPMD convention
 ---------------
@@ -63,6 +71,33 @@ def ilog2(n: int) -> int:
     return n.bit_length() - 1
 
 
+class TransportRequest:
+    """Handle for one in-flight ``ppermute`` (the transport half of the
+    MPI-style nonblocking contract; :mod:`repro.core.requests` builds the
+    user-facing :class:`~repro.core.requests.Request` on top of this).
+
+    ``wait()`` returns the received payload and retires the request;
+    ``test()`` reports completion without blocking.  On lockstep software
+    channels the data movement happens at issue time — what ``wait``
+    completes is the *trace accounting* (the pending slot is closed), which
+    is exactly the part the α-β model prices."""
+
+    def __init__(self, result, on_wait: Callable | None = None):
+        self._result = result
+        self._on_wait = on_wait
+        self._done = on_wait is None
+
+    def test(self) -> bool:
+        return self._done
+
+    def wait(self):
+        if not self._done:
+            on_wait, self._on_wait = self._on_wait, None
+            self._result = on_wait(self._result)
+            self._done = True
+        return self._result
+
+
 class Transport:
     """Abstract SPMD transport — the paper's 'channel' operating on raw memory."""
 
@@ -75,14 +110,19 @@ class Transport:
         raise NotImplementedError
 
     # -- the single communication primitive --------------------------------
-    def ppermute(self, x, perm: Perm, overlap: bool = False):
-        """Rank ``dst`` receives ``x`` from ``src`` for each ``(src, dst)``;
-        ranks that receive nothing get zeros (jax.lax.ppermute semantics).
-
-        ``overlap=True`` declares that this message is pipelined behind the
-        previous one (no new serialized round on the instrumented channels;
-        a scheduling hint only on hardware channels)."""
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        """Issue one permutation message nonblockingly: rank ``dst`` will
+        receive ``x`` from ``src`` for each ``(src, dst)``; ranks that
+        receive nothing get zeros (jax.lax.ppermute semantics).  A message
+        started while earlier requests are pending pipelines behind them
+        (merges into the open serialized slot on instrumented channels; a
+        scheduling hint only on hardware channels)."""
         raise NotImplementedError
+
+    def ppermute(self, x, perm: Perm):
+        """Blocking permutation: issue + immediately complete (one fresh
+        serialized slot per call on the instrumented channels)."""
+        return self.ppermute_start(x, perm).wait()
 
     # -- rank-masked helpers (shape-polymorphic between sim and jax) -------
     def where(self, cond, a, b):
@@ -144,10 +184,11 @@ class JaxTransport(Transport):
     def rank(self):
         return jax.lax.axis_index(self.axes if len(self.axes) > 1 else self.axes[0])
 
-    def ppermute(self, x, perm: Perm, overlap: bool = False):
-        # XLA schedules overlap itself; the flag is metadata on this channel.
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        # XLA schedules overlap itself (issue order in the traced graph is
+        # the async hint); the request completes immediately.
         axis = self.axes if len(self.axes) > 1 else self.axes[0]
-        return jax.lax.ppermute(x, axis, perm)
+        return TransportRequest(jax.lax.ppermute(x, axis, perm))
 
     def where(self, cond, a, b):
         return jnp.where(cond, a, b)
@@ -184,10 +225,13 @@ class ChannelTrace:
     """What the α-β model needs: rounds and the max bytes any rank moved.
 
     ``rounds``/``per_round`` count every message; ``serial_rounds``/
-    ``per_slot`` group messages into serialized slots — an ``overlap=True``
-    message rides in the previous slot (its bytes occupy the link, but it
-    pays no fresh latency because it was issued while the previous round's
-    reduce was still running)."""
+    ``per_slot`` group messages into serialized slots.  Slot membership is
+    decided by **pending-slot accounting**: a message *issued* while earlier
+    requests are still pending rides in the open slot (its bytes occupy the
+    link, but it pays no fresh latency because it was injected while the
+    previous message's reduce was still running); a message issued with no
+    requests in flight opens a fresh slot.  ``issue``/``complete`` are the
+    bookkeeping halves of ``ppermute_start``/``request.wait()``."""
 
     rounds: int = 0
     bytes_per_rank: int = 0  # max over ranks of bytes *sent* (α-β convention)
@@ -195,6 +239,7 @@ class ChannelTrace:
     per_round: list = field(default_factory=list)
     serial_rounds: int = 0
     per_slot: list = field(default_factory=list)  # [[bytes, ...], ...]
+    pending: int = 0  # requests issued but not yet waited
 
     def record(self, nbytes: int, participants: int, overlap: bool = False):
         self.rounds += 1
@@ -206,6 +251,18 @@ class ChannelTrace:
         else:
             self.serial_rounds += 1
             self.per_slot.append([nbytes])
+
+    def issue(self, nbytes: int, participants: int):
+        """Record a nonblockingly-issued message: it merges into the open
+        slot iff some earlier request is still pending."""
+        self.record(nbytes, participants, overlap=self.pending > 0)
+        self.pending += 1
+
+    def complete(self):
+        """Retire one pending request (the ``wait`` half)."""
+        if self.pending <= 0:
+            raise RuntimeError("trace.complete() without a pending request")
+        self.pending -= 1
 
     def slot_bytes(self) -> list:
         """Per serialized slot: total bytes the busiest rank pushed."""
@@ -239,7 +296,9 @@ class SimTransport(Transport):
     def rank(self):
         return np.arange(self.size)
 
-    def ppermute(self, x, perm: Perm, overlap: bool = False):
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        # Lockstep semantics: the data moves at issue time (every rank is
+        # in this call); wait() closes the trace's pending slot.
         out = np.zeros_like(x)
         max_sent = 0
         itemsize = x.dtype.itemsize
@@ -248,7 +307,11 @@ class SimTransport(Transport):
         for src, dst in pairs:
             out[dst] = x[src]
             max_sent = max(max_sent, per_msg)
-        self.trace.record(max_sent, len(pairs), overlap=overlap)
+        self.trace.issue(max_sent, len(pairs))
+        return TransportRequest(out, on_wait=self._finish)
+
+    def _finish(self, out):
+        self.trace.complete()
         return out
 
     def _bcast_cond(self, cond, ref):
@@ -356,32 +419,40 @@ class HostBroker:
 
 class HostTransport(SimTransport):
     """Mediated transport: lockstep like :class:`SimTransport`, but every
-    ``ppermute`` stages each message through a :class:`HostBroker` — sender
-    PUT, receiver GET — so one logical exchange costs **two serialized
-    hops**.  The trace records both hops; ``ChannelSpec(hops=2)`` is the
-    matching α-β model (every α and β is paid twice: HBM→host, host→HBM)."""
+    exchange stages each message through a :class:`HostBroker` — sender PUT,
+    receiver GET — so one logical exchange costs **two serialized hops**.
+    The trace records both hops; ``ChannelSpec(hops=2)`` is the matching
+    α-β model (every α and β is paid twice: HBM→host, host→HBM).
+
+    Under the nonblocking contract the PUT happens at ``ppermute_start``
+    (and merges into the open slot when issued behind pending requests);
+    the GET happens at ``wait()`` and always serializes — so a depth-D
+    pipelined exchange costs D+1 slots, not 2D, exactly what
+    ``models.collective_time_ext`` prices for ``hops=2``."""
 
     def __init__(self, size: int, broker: HostBroker | None = None):
         super().__init__(size)
         self.broker = broker if broker is not None else HostBroker()
         self._seq = 0  # per-transport round counter namespacing broker keys
 
-    def ppermute(self, x, perm: Perm, overlap: bool = False):
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
         self._seq += 1
-        out = np.zeros_like(x)
+        seq = self._seq
         per_msg = int(np.prod(x.shape[1:])) * x.dtype.itemsize
         pairs = list(perm)
         for src, dst in pairs:  # upload hop (all senders in parallel)
-            self.broker.put((id(self), self._seq, src, dst), x[src])
-        for src, dst in pairs:  # download hop (all receivers in parallel)
-            out[dst] = self.broker.get((id(self), self._seq, src, dst))
+            self.broker.put((id(self), seq, src, dst), x[src])
         sent = per_msg if pairs else 0
-        # An overlapped segment's PUT rides the previous slot (issued while
-        # the previous segment reduces); its GET still serializes behind the
-        # PUT, so a depth-D pipelined exchange costs D+1 slots, not 2D.
-        self.trace.record(sent, len(pairs), overlap=overlap)  # PUT hop
-        self.trace.record(sent, len(pairs), overlap=False)  # GET hop
-        return out
+        self.trace.issue(sent, len(pairs))  # PUT hop
+
+        def finish(out):
+            for src, dst in pairs:  # download hop (all receivers in parallel)
+                out[dst] = self.broker.get((id(self), seq, src, dst))
+            self.trace.record(sent, len(pairs), overlap=False)  # GET hop
+            self.trace.complete()
+            return out
+
+        return TransportRequest(np.zeros_like(x), on_wait=finish)
 
 
 # ---------------------------------------------------------------------------

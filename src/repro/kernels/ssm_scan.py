@@ -34,6 +34,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .. import compat
+
 
 def _gla_kernel(
     q_ref,  # [1, L, dk]
@@ -168,7 +170,7 @@ def gla_scan(
             jax.ShapeDtypeStruct((B * H, dk, dv + 1), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((dk, dv + 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.pallas_tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -315,7 +315,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, mode: str = "xla",
     chips = int(math.prod(mesh.devices.shape))
     shp = configs.SHAPES[shape_name]
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         step, args = build_step(cfg, shape_name, mesh, multi_pod, mode, microbatches)
         lowered = step.lower(*args)
         compiled = lowered.compile()
@@ -438,7 +438,7 @@ def main():
     args = ap.parse_args()
 
     if args.explain and args.arch:
-        from ..core.selector import explain, select
+        from ..core.selector import explain, explain_bucket_plan, select
 
         cfg = configs.get(args.arch)
         nbytes = lm.count_params(cfg) * 2 / 256  # bf16 grads per chip share
@@ -450,6 +450,18 @@ def main():
         best = select("allreduce", nbytes, 16, channels=chans)
         print(f"\nselected: {best.channel}/{best.algorithm} depth={best.depth} "
               f"({best.time_s*1e6:.1f}us, ${best.price_usd:.3e})")
+        # bucketed-overlap plan: how the CommScheduler would coalesce the
+        # per-layer gradient requests, with the backward compute window the
+        # roofline model predicts for this arch as the overlap budget
+        from ..core.models import V5E
+
+        shp = configs.SHAPES[args.shape] if args.shape else {"kind": "train",
+                                                             "global_batch": 256,
+                                                             "seq_len": 4096}
+        mfl = model_flops(cfg, "train", shp["global_batch"], shp["seq_len"])
+        # backward ≈ 2/3 of the 6·N·tokens train FLOPs, spread over 256 chips
+        backward_s = (2 / 3) * mfl / 256 / V5E.peak_flops_bf16
+        print(f"\n{explain_bucket_plan('allreduce', nbytes, 16, channels=('ici',), compute_s=backward_s)}")
         return
 
     if args.all or args.grid:

@@ -19,7 +19,7 @@ import time
 import jax
 import numpy as np
 
-from .. import configs
+from .. import compat, configs
 from ..checkpoint import CheckpointManager
 from ..data.pipeline import DataConfig, synthetic_batch
 from ..models import lm
@@ -37,6 +37,12 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mode", default="xla", choices=["xla", "fmi"])
     ap.add_argument("--allreduce", default="auto")
+    ap.add_argument("--schedule", default="blocking", choices=["blocking", "bucketed"],
+                    help="gradient sync: fused blocking collective vs "
+                    "CommScheduler bucketed-overlap requests")
+    ap.add_argument("--bucket-mb", type=float, default=None,
+                    help="pin the scheduler bucket size (MB); default lets "
+                    "selector.bucket_plan choose from the α-β model")
     ap.add_argument("--zero1", action="store_true")
     ap.add_argument("--compression", default="none", choices=["none", "int8"])
     ap.add_argument("--microbatches", type=int, default=1)
@@ -56,13 +62,15 @@ def main():
         microbatches=args.microbatches,
         optimizer=OptConfig(lr=args.lr, total_steps=args.steps, warmup_steps=min(20, args.steps // 5 + 1)),
         allreduce=args.allreduce,
+        schedule=args.schedule,
+        bucket_mb=args.bucket_mb,
         zero1=args.zero1,
         compression=args.compression,
     )
     step_fn, ax, pspecs = make_train_step(cfg, tcfg, mesh, multi_pod=False)
     dcfg = DataConfig()
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = lm.init_params(cfg, jax.random.key(0))
         if args.zero1 and args.mode == "fmi":
             from ..core.communicator import Communicator

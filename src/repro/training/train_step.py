@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from .. import compat
 from ..core import collectives as C
 from ..core import compression as COMP
 from ..core.communicator import Communicator
@@ -52,6 +53,12 @@ class TrainConfig:
     compression: str = "none"  # none | int8
     zero1: bool = False  # explicit ZeRO-1 over the data axis
     donate: bool = True
+    # gradient-sync scheduling: 'blocking' = one fused allreduce_tree after
+    # backward; 'bucketed' = per-layer requests coalesced by CommScheduler
+    # into α-β-model-sized buckets and drained with overlap
+    schedule: str = "blocking"  # 'blocking' | 'bucketed'
+    bucket_mb: float | None = None  # pin the bucket size (MB); None = planner
+    overlap_window_s: float = 0.0  # modeled backward window buckets can hide in
 
 
 def _axes_for(cfg: ModelConfig, mesh, multi_pod: bool, global_batch=None) -> Axes:
@@ -242,8 +249,15 @@ def make_train_step_fmi(cfg: ModelConfig, tcfg: TrainConfig, mesh, multi_pod: bo
                 return (red[:n] / comm_data.size).reshape(shape)
 
             return jax.tree.map(one, grads)
+        # blocking: one fused collective per dtype after backward finishes;
+        # bucketed: per-layer gradient requests through the CommScheduler
+        # (issued in backward order, bucket size from selector.bucket_plan)
         return C.allreduce_tree(
-            grads, comm_data, op="add", algorithm=tcfg.allreduce, mean=True
+            grads, comm_data, op="add", algorithm=tcfg.allreduce, mean=True,
+            schedule=tcfg.schedule,
+            bucket_bytes=(None if tcfg.bucket_mb is None
+                          else int(tcfg.bucket_mb * 1e6)),
+            compute_s=tcfg.overlap_window_s,
         )
 
     def local_step(params, opt_state, batch):
@@ -282,7 +296,7 @@ def make_train_step_fmi(cfg: ModelConfig, tcfg: TrainConfig, mesh, multi_pod: bo
     else:
         opt_shapes = jax.eval_shape(lambda: adamw_init(pshapes, tcfg.optimizer))
 
-    step = jax.shard_map(
+    step = compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(spec_tree(pshapes), spec_tree(opt_shapes), batch_specs),

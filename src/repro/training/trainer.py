@@ -16,6 +16,7 @@ from dataclasses import dataclass, field
 import jax
 import numpy as np
 
+from .. import compat
 from ..checkpoint import CheckpointManager
 from ..data.pipeline import DataConfig, Pipeline, synthetic_batch
 from ..models import lm
@@ -51,7 +52,7 @@ class Trainer:
     def init_state(self, seed: int = 0):
         from .train_step import place_state
 
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             params = lm.init_params(self.cfg, jax.random.key(seed))
             opt = init_opt_state(self.cfg, self.tcfg, params)
             params, opt = place_state(self.mesh, params, opt, self.pspecs, self.tcfg)
@@ -59,7 +60,7 @@ class Trainer:
 
     def run(self, params, opt_state, steps: int, start_step: int = 0):
         history = []
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             for step in range(start_step, start_step + steps):
                 batch = synthetic_batch(
                     self.data_cfg, self.cfg, self.batch, self.seq, step

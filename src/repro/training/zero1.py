@@ -11,6 +11,14 @@ Total communication equals one ring allreduce, but moment memory drops by
 the data-parallel degree — the standard ZeRO-1 trade realized with the
 paper's collective library.  Flattening is per-dtype (params may mix f32
 routers with bf16 matrices); chunks are zero-padded to P · alignment.
+
+Both collective phases go through the nonblocking request layer
+(:mod:`repro.core.requests`) in issue-all-then-waitall form: same
+arithmetic as the old per-group blocking loop, but the program no longer
+*orders* group k+1's collective after group k's wait — on the mesh
+transport the traced issue order is the hint XLA's async scheduler
+overlaps from (the eager software channels complete each collective at
+issue; see ``requests._issue``).
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import collectives as C
+from ..core import requests as R
 from ..core.communicator import Communicator
 
 
@@ -112,11 +121,14 @@ def zero1_update(grads, state, params, layout: FlatLayout, comm: Communicator,
     c1 = 1 - b1 ** step.astype(jnp.float32)
     c2 = 1 - b2 ** step.astype(jnp.float32)
 
-    # phase 1: reduce-scatter every dtype group; collect owned chunks
-    chunks = []
-    for gf in g_flats:
-        chunk = C.reduce_scatter(gf, comm, op="add", algorithm=algorithm)
-        chunks.append(chunk / P if mean else chunk)
+    # phase 1: reduce-scatter every dtype group through the request layer,
+    # issue-all-then-waitall — no program-order barrier between groups
+    # (see the module docstring for what overlap this does and does not buy)
+    rs_reqs = [
+        R.ireduce_scatter(gf, comm, op="add", algorithm=algorithm)
+        for gf in g_flats
+    ]
+    chunks = [c / P if mean else c for c in R.waitall(rs_reqs)]
 
     # global-norm clip on the *reduced* gradient: each rank owns 1/P of the
     # flat space, so the global sq-norm is an allreduce of chunk sq-norms
@@ -128,7 +140,9 @@ def zero1_update(grads, state, params, layout: FlatLayout, comm: Communicator,
         scale = jnp.minimum(1.0, opt_cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
         chunks = [(c.astype(jnp.float32) * scale).astype(c.dtype) for c in chunks]
 
-    new_p, new_m, new_v = [], [], []
+    # phase 2: sharded AdamW per group, then the allgather of every updated
+    # chunk through the request layer, all issued before any is waited on
+    new_m, new_v, ag_reqs = [], [], []
     for gi, (chunk, pf) in enumerate(zip(chunks, p_flats)):
         r = comm.transport().rank()
         own = jax.lax.dynamic_slice_in_dim(pf, r * chunk.shape[0], chunk.shape[0])
@@ -138,10 +152,13 @@ def zero1_update(grads, state, params, layout: FlatLayout, comm: Communicator,
         upd = (m / c1) / (jnp.sqrt(v / c2) + opt_cfg.eps)
         upd = upd + opt_cfg.weight_decay * own.astype(jnp.float32)
         own_new = (own.astype(jnp.float32) - lr * upd).astype(pf.dtype)
-        full = C.allgather(own_new, comm, algorithm=ag_algorithm)
-        new_p.append(full[: pf.shape[0]])
+        ag_reqs.append(R.iallgather(own_new, comm, algorithm=ag_algorithm))
         new_m.append(m.astype(state["m"][gi].dtype))
         new_v.append(v.astype(state["v"][gi].dtype))
+    new_p = [
+        full[: pf.shape[0]]
+        for full, pf in zip(R.waitall(ag_reqs), p_flats)
+    ]
 
     params_new = unflatten_groups(new_p, layout)
     return params_new, {"m": new_m, "v": new_v, "step": step}, {"lr": lr, "grad_norm": gnorm}

@@ -5,11 +5,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ops, ref
-from repro.kernels.flash_attention import flash_attention as fa_pallas
-from repro.kernels.quantize import dequantize_blockwise as dq_pallas
-from repro.kernels.quantize import quantize_blockwise as q_pallas
-from repro.kernels.ssm_scan import gla_scan as gla_pallas
+# Without an accelerator every kernel runs in pallas interpret mode
+# (interpret=True below); if pallas itself cannot even be imported on this
+# jax/platform combination, skip the module with the reason rather than
+# erroring — the kernels are exercised for real on TPU builds.
+try:
+    from repro.kernels import ops, ref
+    from repro.kernels.flash_attention import flash_attention as fa_pallas
+    from repro.kernels.quantize import dequantize_blockwise as dq_pallas
+    from repro.kernels.quantize import quantize_blockwise as q_pallas
+    from repro.kernels.ssm_scan import gla_scan as gla_pallas
+except (ImportError, AttributeError) as e:  # pragma: no cover - env-specific
+    pytest.skip(f"pallas unavailable on this jax/platform: {e!r}; "
+                "kernel validation needs pallas interpret mode",
+                allow_module_level=True)
 
 rng = np.random.default_rng(0)
 

@@ -24,7 +24,7 @@ SCRIPT = textwrap.dedent(
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
 
-    from repro import configs
+    from repro import compat, configs
     from repro.core import collectives as C
     from repro.core.communicator import Communicator
     from repro.data.pipeline import DataConfig, synthetic_batch
@@ -40,16 +40,16 @@ SCRIPT = textwrap.dedent(
             failures.append(name)
 
     # ---- 1. shard_map collectives vs lax references --------------------
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((8,), ("data",), auto_axes=True)
     comm = Communicator(axes=("data",), sizes=(8,))
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
 
     def run(fn, out_specs=P("data", None)):
-        g = jax.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
-                          in_specs=P("data", None), out_specs=out_specs,
-                          axis_names={"data"})
-        with jax.set_mesh(mesh):
+        g = compat.shard_map(lambda v: fn(v[0])[None], mesh=mesh,
+                             in_specs=P("data", None), out_specs=out_specs,
+                             axis_names={"data"})
+        with compat.set_mesh(mesh):
             return np.asarray(jax.jit(g)(x))
 
     for algo in ("ring", "rabenseifner", "recursive_doubling", "xla"):
@@ -62,17 +62,41 @@ SCRIPT = textwrap.dedent(
     got = run(lambda v: C.scan(v, comm))
     check("scan", np.allclose(got, np.cumsum(x, 0), atol=1e-4))
 
+    # nonblocking request layer on the mesh transport: iallreduce == allreduce,
+    # and the bucketed scheduler path is bit-exact with the blocking path for
+    # a rank-order-independent algorithm
+    got = run(lambda v: C.allreduce(v, comm, algorithm="recursive_doubling"))
+    got_i = run(lambda v: comm.iallreduce(v, algorithm="recursive_doubling").wait())
+    check("iallreduce==allreduce", np.array_equal(got, got_i))
+
+    tree = {f"w{i}": x[:, i * 2:(i + 1) * 2] for i in range(8)}
+    def sync(schedule, **kw):
+        def body(v):
+            tr = {k: t[0] for k, t in v.items()}
+            out = C.allreduce_tree(tr, comm, algorithm="recursive_doubling",
+                                   mean=True, schedule=schedule, **kw)
+            return {k: t[None] for k, t in out.items()}
+        g = compat.shard_map(body, mesh=mesh,
+                             in_specs=({k: P("data", None) for k in tree},),
+                             out_specs={k: P("data", None) for k in tree},
+                             axis_names={"data"})
+        with compat.set_mesh(mesh):
+            return jax.tree.map(np.asarray, jax.jit(g)(tree))
+    blk = sync("blocking")
+    bkt = sync("bucketed", bucket_bytes=16)  # tiny buckets: every leaf its own
+    check("bucketed==blocking mesh", all(
+        np.array_equal(blk[k], bkt[k]) for k in tree))
+
     # ---- 2. fmi-mode vs xla-mode training parity -----------------------
     TINY = configs.get_reduced("llama3_2_1b", n_layers=2, d_model=64, n_heads=4,
                                n_kv_heads=2, d_ff=128, vocab_size=256, head_dim=16)
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,)*2)
+    mesh2 = compat.make_mesh((4, 2), ("data", "model"), auto_axes=True)
     opt = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10, clip_norm=0.0)
     dcfg = DataConfig()
 
     def train(tcfg, steps=3):
         step_fn, axx, pspecs = make_train_step(TINY, tcfg, mesh2, False)
-        with jax.set_mesh(mesh2):
+        with compat.set_mesh(mesh2):
             params = lm.init_params(TINY, jax.random.key(0))
             if tcfg.zero1 and tcfg.mode == "fmi":
                 from repro.training import zero1 as z1
@@ -102,9 +126,20 @@ SCRIPT = textwrap.dedent(
              zip(jax.tree.leaves(p_xla), jax.tree.leaves(p_fmi)))
     check("fmi==xla params", dp < 5e-3, f"dparam={dp:.2e}")
 
-    l_rd, _ = train(TrainConfig(mode="fmi", optimizer=opt, donate=False,
-                                allreduce="recursive_doubling"))
+    l_rd, p_rd = train(TrainConfig(mode="fmi", optimizer=opt, donate=False,
+                                   allreduce="recursive_doubling"))
     check("fmi rd==ring", max(abs(a-b) for a,b in zip(l_fmi, l_rd)) < 1e-4)
+
+    # bucketed overlap schedule: per-layer requests coalesced by the
+    # CommScheduler must train bit-identically to the blocking fused sync
+    # (recursive doubling reduces every element in the same rank order
+    # regardless of which bucket it travels in)
+    l_bk, p_bk = train(TrainConfig(mode="fmi", optimizer=opt, donate=False,
+                                   allreduce="recursive_doubling",
+                                   schedule="bucketed", bucket_mb=0.01))
+    dbk = max(float(jnp.abs(a - b).max()) for a, b in
+              zip(jax.tree.leaves(p_rd), jax.tree.leaves(p_bk)))
+    check("bucketed==blocking train", dbk == 0.0, f"dparam={dbk:.2e}")
 
     # ---- 3. ZeRO-1 parity ----------------------------------------------
     l_z1, p_z1 = train(TrainConfig(mode="fmi", optimizer=opt, donate=False,
@@ -128,11 +163,10 @@ SCRIPT = textwrap.dedent(
 
     tmp = tempfile.mkdtemp()
     tcfg = TrainConfig(mode="xla", optimizer=opt, donate=False)
-    mesh4 = jax.make_mesh((4, 1), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,)*2,
-                          devices=jax.devices()[:4])
+    mesh4 = compat.make_mesh((4, 1), ("data", "model"), auto_axes=True,
+                             devices=jax.devices()[:4])
     step4, _, pspecs4 = make_train_step(TINY, tcfg, mesh4, False)
-    with jax.set_mesh(mesh4):
+    with compat.set_mesh(mesh4):
         params = lm.init_params(TINY, jax.random.key(0))
         opt_state = init_opt_state(TINY, tcfg, params)
         params, opt_state = place_state(mesh4, params, opt_state, pspecs4, tcfg)
@@ -145,11 +179,10 @@ SCRIPT = textwrap.dedent(
         loss_before = float(m["loss"])
 
     # "failure": rebuild on 2 surviving devices, restore, continue
-    mesh2d = jax.make_mesh((2, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,)*2,
-                           devices=jax.devices()[:2])
+    mesh2d = compat.make_mesh((2, 1), ("data", "model"), auto_axes=True,
+                              devices=jax.devices()[:2])
     step2, _, pspecs2 = make_train_step(TINY, tcfg, mesh2d, False)
-    with jax.set_mesh(mesh2d):
+    with compat.set_mesh(mesh2d):
         shapes = jax.eval_shape(lambda: {"params": params, "opt": opt_state})
         state, step = mgr.restore_latest(shapes)
         ok_resume = step == 2

@@ -1,0 +1,354 @@
+"""Nonblocking request layer + bucketed overlap scheduler.
+
+Covers the PR-3 acceptance surface:
+
+* ``Request``/``waitall`` MPI semantics (results in request order, idempotent
+  waits, ``test`` never blocks);
+* transport-level pending-slot accounting: messages *issued* while earlier
+  requests are in flight merge into the open serialized slot, so the
+  instrumented trace keeps matching the α-β model exactly;
+* tag-matched ``isend``/``irecv`` point-to-point;
+* the :class:`CommScheduler` bucketed gradient sync is **bit-exact** with
+  the blocking fused path on the sim transport for rank-order-independent
+  algorithms (the mesh-transport half of this claim runs on 8 simulated
+  devices inside ``test_multidevice.py``'s subprocess battery);
+* ``selector.bucket_plan`` monotonicity: higher channel latency α → fuse
+  into (weakly) bigger buckets; lower bandwidth (higher β) → (weakly)
+  smaller buckets; no overlap window → one fused bucket.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import channels, collectives as C, requests as R
+from repro.core.communicator import Communicator
+from repro.core.models import CHANNELS, ChannelSpec, round_schedule
+from repro.core.requests import Request, RequestQueue, irecv, isend, waitall
+from repro.core.scheduler import CommScheduler
+from repro.core.selector import BUCKET_SIZES, bucket_plan, explain_bucket_plan
+from repro.core.transport import HostTransport, SimTransport
+
+RNG = np.random.default_rng(7)
+
+
+def _comm(P, channel="sim"):
+    return Communicator(axes=("data",), sizes=(P,), channel=channel)
+
+
+def _tree(P, seed=0, dtypes=(np.float32,)):
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for i, shape in enumerate([(3, 5), (17,), (2, 2, 4), (31,), (8, 3)]):
+        dt = dtypes[i % len(dtypes)]
+        tree[f"layer{i}"] = rng.normal(size=(P,) + shape).astype(dt)
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Request / waitall semantics
+# ---------------------------------------------------------------------------
+
+
+def test_waitall_returns_results_in_request_order():
+    completed = []
+
+    def mk(i):
+        def thunk():
+            completed.append(i)
+            return i * 10
+        return Request("op", thunk=thunk)
+
+    reqs = [mk(i) for i in range(5)]
+    # complete a suffix out of order first; waitall must still return
+    # results positionally
+    assert reqs[3].wait() == 30
+    assert reqs[4].wait() == 40
+    out = waitall(reqs)
+    assert out == [0, 10, 20, 30, 40]
+    assert completed == [3, 4, 0, 1, 2]  # actual completion order differed
+
+
+def test_request_wait_is_idempotent_and_test_nonblocking():
+    calls = []
+    req = Request("op", thunk=lambda: calls.append(1) or "x")
+    assert not req.test()
+    assert calls == []  # test() must not force completion of a thunk
+    assert req.wait() == "x"
+    assert req.test()
+    assert req.wait() == "x"
+    assert calls == [1]  # completed exactly once
+
+
+def test_request_queue_drains_in_issue_order_and_empties():
+    q = RequestQueue()
+    for i in range(4):
+        q.push(Request("op", result=i))
+    assert len(q) == 4
+    assert q.waitall() == [0, 1, 2, 3]
+    assert len(q) == 0 and q.waitall() == []
+
+
+# ---------------------------------------------------------------------------
+# Pending-slot accounting: trace still matches the α-β model exactly
+# ---------------------------------------------------------------------------
+
+
+def test_pending_issues_merge_into_one_slot():
+    t = SimTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    x = np.ones((4, 8), np.float32)
+    reqs = [t.ppermute_start(x, perm) for _ in range(4)]
+    assert t.trace.rounds == 4
+    assert t.trace.serial_rounds == 1  # 3 later messages rode the open slot
+    assert t.trace.slot_bytes() == [4 * 32]
+    for r in reqs:
+        r.wait()
+    assert t.trace.pending == 0
+    # the blocking primitive serializes: one fresh slot per call
+    t.ppermute(x, perm)
+    t.ppermute(x, perm)
+    assert t.trace.serial_rounds == 3
+    spec = CHANNELS["sim"]
+    # α-β critical path: 3 slots, 6 messages' bytes
+    assert t.trace.time(spec.alpha, spec.beta) == pytest.approx(
+        3 * spec.alpha + 6 * 32 * spec.beta
+    )
+
+
+def test_wait_reopens_serialization():
+    t = SimTransport(2)
+    perm = [(0, 1), (1, 0)]
+    x = np.ones((2, 4), np.float32)
+    t.ppermute_start(x, perm).wait()  # slot 1
+    t.ppermute_start(x, perm).wait()  # slot 2 (nothing pending at issue)
+    assert t.trace.serial_rounds == 2
+
+
+def test_trace_complete_without_pending_raises():
+    t = SimTransport(2)
+    with pytest.raises(RuntimeError):
+        t.trace.complete()
+
+
+def test_host_pipelined_exchange_costs_depth_plus_one_slots():
+    """On the mediated channel a depth-D burst of exchanges costs D+1
+    serialized slots (D pipelined PUTs share the first; every GET
+    serializes) — the ``hops=2`` pricing convention of the α-β model."""
+    D = 4
+    t = HostTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    x = np.ones((4, 16), np.float32)
+    reqs = [t.ppermute_start(x, perm) for _ in range(D)]
+    for r in reqs:
+        r.wait()
+    assert t.trace.rounds == 2 * D  # every message records both hops
+    assert t.trace.serial_rounds == D + 1
+    assert t.broker.stats.puts == t.broker.stats.gets == 4 * D
+
+
+@pytest.mark.parametrize("P,depth", [(4, 2), (8, 4)])
+def test_pipelined_sim_trace_still_matches_schedule(P, depth):
+    """After the overlap→request refactor the pipelined algorithms must
+    still put the unpipelined byte schedule into the serialized slots."""
+    from repro.core import algorithms as A
+
+    t = SimTransport(P)
+    A.allreduce_ring_pipelined(t, np.zeros((P, P * 8), np.float32), "add",
+                               depth=depth)
+    want = [float(b) for b in round_schedule("allreduce", "ring", P * 8 * 4, P)]
+    assert [float(b) for b in t.trace.slot_bytes()] == want
+
+
+# ---------------------------------------------------------------------------
+# Nonblocking collectives + point-to-point
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", [4, 8])
+def test_icollectives_match_blocking(P):
+    comm = _comm(P)
+    x = RNG.normal(size=(P, 16)).astype(np.float32)
+    assert np.array_equal(
+        comm.iallreduce(x, algorithm="recursive_doubling").wait(),
+        C.allreduce(x, comm, algorithm="recursive_doubling"),
+    )
+    assert np.array_equal(
+        comm.ireduce_scatter(x, algorithm="recursive_halving").wait(),
+        C.reduce_scatter(x, comm, algorithm="recursive_halving"),
+    )
+    chunk = RNG.normal(size=(P, 4)).astype(np.float32)
+    assert np.array_equal(
+        comm.iallgather(chunk, algorithm="ring").wait(),
+        C.allgather(chunk, comm, algorithm="ring"),
+    )
+
+
+def test_isend_irecv_tag_matching():
+    t = SimTransport(4)
+    shift = [(i, (i + 1) % 4) for i in range(4)]
+    back = [(i, (i - 1) % 4) for i in range(4)]
+    a = np.arange(8, dtype=np.float32).reshape(4, 2)
+    b = -a
+    isend(a, t, shift, tag="fwd")
+    isend(b, t, back, tag="bwd")
+    got_b = irecv(t, tag="bwd").wait()  # completion order != issue order
+    got_a = irecv(t, tag="fwd").wait()
+    assert np.array_equal(got_a, a[[3, 0, 1, 2]])
+    assert np.array_equal(got_b, b[[1, 2, 3, 0]])
+    # both messages were in flight together: they shared one slot
+    assert t.trace.serial_rounds == 1 and t.trace.rounds == 2
+
+
+def test_isend_duplicate_tag_and_unmatched_irecv_raise():
+    t = SimTransport(2)
+    perm = [(0, 1), (1, 0)]
+    x = np.ones((2, 2), np.float32)
+    isend(x, t, perm, tag=7)
+    with pytest.raises(ValueError, match="collision"):
+        isend(x, t, perm, tag=7)
+    with pytest.raises(ValueError, match="no matching isend"):
+        irecv(t, tag=99)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed scheduler: bit-exact with the blocking path (sim transport; the
+# mesh-transport check runs in test_multidevice.py's subprocess battery)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P,algo", [
+    (4, "recursive_doubling"),
+    (8, "recursive_doubling"),
+    (6, "recursive_doubling"),  # non-pow2
+    (8, "rabenseifner"),
+])
+@pytest.mark.parametrize("bucket_bytes", [64, 300, 10**9])
+def test_bucketed_bit_exact_with_blocking(P, algo, bucket_bytes):
+    comm = _comm(P)
+    tree = _tree(P, seed=P)
+    blk = C.allreduce_tree(tree, comm, algorithm=algo, mean=True)
+    bkt = C.allreduce_tree(tree, comm, algorithm=algo, mean=True,
+                           schedule="bucketed", bucket_bytes=bucket_bytes)
+    for k in tree:
+        assert np.array_equal(np.asarray(blk[k]), np.asarray(bkt[k])), k
+
+
+def test_bucketed_multi_dtype_buckets_never_mix():
+    P = 4
+    comm = _comm(P)
+    tree = _tree(P, seed=3, dtypes=(np.float32, np.float64))
+    blk = C.allreduce_tree(tree, comm, algorithm="recursive_doubling", mean=True)
+    bkt = C.allreduce_tree(tree, comm, algorithm="recursive_doubling", mean=True,
+                           schedule="bucketed", bucket_bytes=128)
+    for k in tree:
+        assert blk[k].dtype == bkt[k].dtype == tree[k].dtype
+        assert np.array_equal(np.asarray(blk[k]), np.asarray(bkt[k])), k
+
+
+def test_scheduler_submit_flush_drain_and_errors():
+    P = 4
+    comm = _comm(P)
+    sched = CommScheduler(comm, mean=False, algorithm="recursive_doubling",
+                          bucket_bytes=100)
+    g1 = RNG.normal(size=(P, 7)).astype(np.float32)
+    g2 = RNG.normal(size=(P, 9)).astype(np.float32)
+    sched.submit("a", g1)
+    with pytest.raises(ValueError, match="duplicate"):
+        sched.submit("a", g1)
+    sched.submit("b", g2)
+    out = sched.drain()
+    assert set(out) == {"a", "b"}
+    assert np.allclose(out["a"], np.broadcast_to(g1.sum(0), g1.shape), atol=1e-5)
+    assert np.allclose(out["b"], np.broadcast_to(g2.sum(0), g2.shape), atol=1e-5)
+    # drain empties the scheduler: a second drain returns nothing new
+    assert sched.drain() == {}
+
+
+def test_scheduler_single_rank_passthrough():
+    comm = _comm(1)
+    sched = CommScheduler(comm, bucket_bytes=10)
+    x = RNG.normal(size=(1, 5)).astype(np.float32)
+    sched.submit("w", x)
+    out = sched.drain()
+    assert out["w"] is x
+
+
+def test_scheduler_uses_planner_when_given_total_hint():
+    comm = _comm(8)
+    sched = CommScheduler(comm, total_bytes_hint=64 << 20, compute_s=2e-3)
+    assert sched.plan is not None
+    assert sched.bucket_bytes == sched.plan.bucket_bytes
+    assert sched.plan.n_buckets > 1  # with an overlap window it splits
+
+
+# ---------------------------------------------------------------------------
+# bucket_plan: model-driven size choice + monotonicity in α/β
+# ---------------------------------------------------------------------------
+
+_BW = 1 / (50e9)  # ici-class seconds/byte
+
+
+def _plan_size(alpha, beta, compute_s=5e-3, total=256 << 20):
+    name = "bucketplan_test_channel"
+    channels.register_channel(
+        ChannelSpec(name, alpha=alpha, beta=beta, kind="direct", push=True),
+        transport_factory=lambda size=None, **kw: SimTransport(size),
+        overwrite=True,
+    )
+    try:
+        return bucket_plan("allreduce", total, 16, channels=(name,),
+                           compute_s=compute_s).bucket_bytes
+    finally:
+        channels.unregister(name)
+
+
+def test_bucket_plan_monotone_in_alpha():
+    """Higher per-message latency → (weakly) bigger buckets: latency-bound
+    channels want the fused end of the trade."""
+    sizes = [_plan_size(a, _BW) for a in (1e-7, 1e-6, 1e-5, 1e-4, 1e-3)]
+    assert sizes == sorted(sizes), sizes
+    assert sizes[0] < sizes[-1]  # the trade actually moves
+
+
+def test_bucket_plan_monotone_in_beta():
+    """The more bandwidth-bound a bucket is (higher β relative to α), the
+    smaller the planner makes it: with the overlap window held proportional
+    to the total wire time (fixing the compute/comm regime), the optimal
+    bucket ≈ α/β — only the latency floor stops the split."""
+    total = 256 << 20
+    betas = (1 / 400e9, 1 / 50e9, 1 / 5e9, 1 / 0.5e9)
+    sizes = [_plan_size(1e-6, b, compute_s=3 * total * b, total=total)
+             for b in betas]
+    assert sizes == sorted(sizes, reverse=True), sizes
+    assert sizes[0] > sizes[-1]
+
+
+def test_bucket_plan_no_overlap_window_degenerates_to_blocking():
+    plan = bucket_plan("allreduce", 64 << 20, 16, channels=("ici",),
+                       compute_s=0.0)
+    assert plan.n_buckets == 1
+    assert plan.bucket_bytes == 64 << 20
+
+
+def test_bucket_plan_exposed_time_beats_or_ties_single_bucket():
+    plan = bucket_plan("allreduce", 256 << 20, 16, channels=("ici",),
+                       compute_s=10e-3)
+    single = bucket_plan("allreduce", 256 << 20, 16, channels=("ici",),
+                         compute_s=10e-3, bucket_sizes=(1 << 62,))
+    assert plan.time_s <= single.time_s
+    assert plan.n_buckets >= 1 and plan.per_bucket_time_s > 0
+
+
+def test_explain_bucket_plan_prints_choice_and_costs():
+    table = explain_bucket_plan("allreduce", 64 << 20, 16, channels=("ici",),
+                                compute_s=2e-3)
+    assert "bucket plan" in table and "exposed" in table
+    assert "->" in table and "$" in table
+    # the chosen row is marked and consistent with bucket_plan
+    plan = bucket_plan("allreduce", 64 << 20, 16, channels=("ici",),
+                       compute_s=2e-3)
+    assert f"bucket={plan.bucket_bytes/1e6:.2f}MB" in table
+
+
+def test_bucket_sizes_cover_sane_range():
+    assert BUCKET_SIZES[0] == 1 << 18 and BUCKET_SIZES[-1] >= 64 << 20
