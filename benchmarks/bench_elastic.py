@@ -1,0 +1,145 @@
+"""Time-to-recover: kill a rank mid-bucketed-allreduce, measure the heal.
+
+The elastic claim in numbers (docs/elasticity.md): recovery is a cheap,
+first-class operation.  For every (world size, bucket count) cell this
+bench runs the real protocol on the instrumented sim channel —
+
+    1. a bucketed-overlap gradient sync is in flight,
+    2. the last rank is killed mid-collective (``SimTransport.kill``),
+    3. **quiesce**  — ``CommScheduler.abort`` cancels the stale generation,
+    4. **regroup**  — ``build_group`` + next-generation communicator +
+       ``Membership.reform``,
+    5. **reshard**  — the committed checkpoint is reloaded and restacked at
+       the new world size,
+
+and reports the wall time of each phase.  Bucket depth matters because the
+quiesce cost scales with how many requests are in flight when the failure
+lands; world size moves both the collective round count and the reshard
+payload.  An artifact JSON (``benchmarks/artifacts/elastic/recover.json``)
+is emitted like the other benches' artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.checkpoint.store import load_checkpoint, save_checkpoint
+from repro.core import channels
+from repro.core.algorithms import build_group
+from repro.core.communicator import Communicator
+from repro.core.models import ChannelSpec
+from repro.core.scheduler import CommScheduler
+from repro.core.transport import RankFailure, SimTransport
+from repro.runtime import Membership
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "elastic")
+WORLDS = (4, 8, 16)
+N_BUCKETS = (1, 4, 16)
+N_TENSORS = 32
+ELEMS = 2048  # per-tensor elements (f32)
+_CHANNEL = "bench_elastic_channel"
+
+
+def _grads(P, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        f"layer{i}": rng.normal(size=(P, ELEMS)).astype(np.float32)
+        for i in range(N_TENSORS)
+    }
+
+
+def _recover_once(P: int, n_buckets: int, ckpt_dir: str) -> dict:
+    box = {"t": SimTransport(P)}
+    channels.register_channel(
+        ChannelSpec(_CHANNEL, alpha=5e-6, beta=1 / 16e9, kind="direct",
+                    push=True),
+        transport_factory=lambda **kw: box["t"],
+        overwrite=True,
+    )
+    try:
+        total = N_TENSORS * ELEMS * 4
+        bucket_bytes = max(256, total // n_buckets)
+        comm = Communicator(axes=("data",), sizes=(P,), channel=_CHANNEL)
+        sched = CommScheduler(comm, mean=True, algorithm="recursive_doubling",
+                              bucket_bytes=bucket_bytes)
+        m = Membership(expected=P)
+        for r in range(P):
+            m.join(r)
+
+        # one committed step, then a failure mid-sync of the next: land the
+        # kill halfway through the bucket sequence so ~half the buckets are
+        # already in flight (the quiesce cost the depth sweep measures)
+        logical = {k: v[0] for k, v in _grads(P, seed=1).items()}
+        save_checkpoint(ckpt_dir, logical, step=1)
+        rounds_per_bucket = P.bit_length() - 1  # recursive doubling, pow2 P
+        box["t"].kill(P - 1,
+                      after_rounds=rounds_per_bucket * (n_buckets // 2) + 1)
+        failed_rank = None
+        try:
+            for name, g in _grads(P, seed=2).items():
+                sched.submit(name, g)
+            sched.drain()
+        except RankFailure as e:
+            failed_rank = e.rank
+        if failed_rank is None:
+            raise RuntimeError("fault injection never fired; bench is broken")
+
+        t0 = time.perf_counter()
+        m.mark_failed(failed_rank)
+        cancelled = sched.abort(comm.generation)  # quiesce
+        t1 = time.perf_counter()
+        build = build_group(m.survivors(), "pow2_floor")  # regroup
+        m.reform(build.active)
+        box["t"] = SimTransport(build.size)
+        comm = comm.regroup(sizes=(build.size,))
+        sched = CommScheduler(comm, mean=True, algorithm="recursive_doubling",
+                              bucket_bytes=bucket_bytes)
+        t2 = time.perf_counter()
+        target = {k: np.zeros(v.shape, v.dtype) for k, v in logical.items()}
+        tree, step = load_checkpoint(ckpt_dir, target)  # reshard
+        params = {
+            k: np.broadcast_to(np.asarray(v), (build.size,) + v.shape).copy()
+            for k, v in tree.items()
+        }
+        t3 = time.perf_counter()
+
+        # resumed sync actually works at the new size (not timed)
+        for name, g in _grads(build.size, seed=3).items():
+            sched.submit(name, g)
+        assert len(sched.drain()) == N_TENSORS and params and step == 1
+        return dict(
+            P=P, n_buckets=n_buckets, bucket_bytes=bucket_bytes, dp=build.size,
+            cancelled=cancelled,
+            quiesce_us=(t1 - t0) * 1e6,
+            regroup_us=(t2 - t1) * 1e6,
+            reshard_us=(t3 - t2) * 1e6,
+            total_us=(t3 - t0) * 1e6,
+        )
+    finally:
+        channels.unregister(_CHANNEL)
+
+
+def run():
+    rows, cells = [], []
+    with tempfile.TemporaryDirectory() as td:
+        for P in WORLDS:
+            for nb in N_BUCKETS:
+                cell = _recover_once(P, nb, os.path.join(td, f"{P}_{nb}"))
+                cells.append(cell)
+                rows.append((
+                    f"elastic/recover/P{P}/buckets{nb}", cell["total_us"],
+                    f"dp={cell['dp']} cancelled={cell['cancelled']} "
+                    f"quiesce={cell['quiesce_us']:.0f}us "
+                    f"regroup={cell['regroup_us']:.0f}us "
+                    f"reshard={cell['reshard_us']:.0f}us",
+                ))
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "recover.json"), "w") as f:
+        json.dump({"tensors": N_TENSORS, "elems": ELEMS, "cells": cells}, f,
+                  indent=1)
+    return rows

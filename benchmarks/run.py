@@ -13,6 +13,8 @@ Mapping to the paper:
     kmeans       -> Figure 8/9 (distributed K-Means case study: time + cost)
     overlap      -> blocking vs bucketed-overlap gradient sync sweep
                     (docs/nonblocking.md; the PR-3 scheduler claim)
+    elastic      -> time-to-recover vs world size and bucket depth
+                    (docs/elasticity.md; kill-rank -> quiesce/regroup/reshard)
     kernels      -> Pallas kernel throughput vs naive references
     roofline     -> §Roofline reader over the dry-run artifacts
 """
@@ -31,6 +33,7 @@ BENCHES = [
     "overhead",
     "kmeans",
     "overlap",
+    "elastic",
     "kernels",
     "roofline",
 ]

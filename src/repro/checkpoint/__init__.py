@@ -1,3 +1,8 @@
-from .store import CheckpointManager, load_checkpoint, save_checkpoint
+from .store import CheckpointManager, load_checkpoint, read_manifest, save_checkpoint
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "load_checkpoint",
+    "read_manifest",
+]

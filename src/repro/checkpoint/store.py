@@ -106,6 +106,21 @@ def latest_step(path: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(path: str, step: int | None = None) -> dict:
+    """Manifest of the checkpoint at ``step`` (default: latest committed).
+
+    The manifest carries the ``extra`` dict the saver recorded — the elastic
+    runtime stamps ``{"generation": g, "world": P}`` there, so a restore at
+    a new topology can verify it is resharding a checkpoint from an earlier
+    generation (monotonicity) and log what world it was written at."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {path}")
+    with open(os.path.join(path, f"step_{step:09d}", "manifest.json")) as f:
+        return json.load(f)
+
+
 def load_checkpoint(path: str, target: Any, step: int | None = None,
                     shardings: Any = None, process: int = 0):
     """Restore into the structure of ``target`` (a pytree of arrays or
@@ -188,4 +203,12 @@ class CheckpointManager:
             shutil.rmtree(os.path.join(self.path, f"step_{s:09d}"), ignore_errors=True)
 
     def restore_latest(self, target, shardings=None):
+        """Load the newest committed checkpoint into ``target``'s structure
+        (``shardings``: place leaves onto the current — possibly regrouped —
+        mesh; this is the elastic *reshard* step)."""
         return load_checkpoint(self.path, target, shardings=shardings)
+
+    def latest_manifest(self) -> dict:
+        """Manifest (step, keys, ``extra`` — e.g. the elastic generation)
+        of the newest committed checkpoint."""
+        return read_manifest(self.path)

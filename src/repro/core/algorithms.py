@@ -41,13 +41,91 @@ doubling, plain binomial trees elsewhere) so the sim oracle covers any P.
 from __future__ import annotations
 
 import math
-from typing import Callable
+from dataclasses import dataclass
+from typing import Callable, Sequence
 
 from .transport import Perm, Transport, ilog2, is_pow2, resolve_op
 
 
 def _ceil_log2(n: int) -> int:
     return max(0, (n - 1).bit_length())
+
+
+# ---------------------------------------------------------------------------
+# Group builds — how the elastic runtime rebuilds a communicator from
+# survivors after a membership change (see runtime/elastic.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class GroupBuild:
+    """A regrouped communicator layout over the surviving ranks.
+
+    ``active`` are the old rank ids that participate in the new group (new
+    contiguous rank = position in ``active``; ``rank_map`` spells it out);
+    ``spares`` are survivors left idling until the next rescale *up*.
+    ``algorithm`` is the allreduce family the layout was built for."""
+
+    strategy: str
+    active: tuple[int, ...]
+    spares: tuple[int, ...]
+    rank_map: dict
+    algorithm: str
+
+    @property
+    def size(self) -> int:
+        return len(self.active)
+
+
+def build_group(survivors: Sequence[int], strategy: str = "auto") -> GroupBuild:
+    """Build the next-generation group from ``survivors``.
+
+    Three strategies (the elastic controller's regroup step):
+
+    * ``'pow2_floor'`` — largest power-of-two prefix of the survivors is
+      active, the rest are spares.  Every collective keeps its pow2 fast
+      path; the spares idle (and absorb the *next* failure for free).
+    * ``'ring'`` — every survivor stays active; ring reduce-scatter /
+      allgather handle any rank count, trading log-depth for zero waste.
+    * ``'recursive_doubling'`` — every survivor stays active at a non-pow2
+      size via the fold-in/fold-out spare protocol of
+      :func:`allreduce_recursive_doubling`: the even ranks below ``2·extra``
+      donate their contribution to a pow2 core and receive the result back —
+      in-group spares rather than idle ones.
+    * ``'auto'`` — ``recursive_doubling`` when the survivor count is a power
+      of two (it is then plain recursive doubling), else ``'ring'`` (keeps
+      all survivors without the two extra fold rounds).
+
+    Example::
+
+        >>> b = build_group([0, 1, 2, 4, 5, 6, 7], strategy="pow2_floor")
+        >>> b.size, b.active, b.spares
+        (4, (0, 1, 2, 4), (5, 6, 7))
+        >>> b.rank_map[4]     # old rank 4 becomes new rank 3
+        3
+        >>> build_group([0, 1, 2, 4, 5, 6, 7], strategy="ring").size
+        7
+    """
+    survivors = tuple(sorted(set(int(r) for r in survivors)))
+    if not survivors:
+        raise ValueError("cannot build a group from zero survivors")
+    n = len(survivors)
+    if strategy == "auto":
+        strategy = "recursive_doubling" if is_pow2(n) else "ring"
+    if strategy == "pow2_floor":
+        k = 1 << (n.bit_length() - 1)
+        active, spares = survivors[:k], survivors[k:]
+        algorithm = "recursive_doubling"
+    elif strategy in ("ring", "recursive_doubling"):
+        active, spares = survivors, ()
+        algorithm = strategy
+    else:
+        raise ValueError(
+            f"unknown regroup strategy {strategy!r}; expected 'auto', "
+            "'pow2_floor', 'ring', or 'recursive_doubling'"
+        )
+    rank_map = {old: new for new, old in enumerate(active)}
+    return GroupBuild(strategy, active, spares, rank_map, algorithm)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,16 @@ Sub-communicators (paper: "an application can create multiple communicators
 with different numbers of peers or lifetimes") are created with
 :meth:`Communicator.sub` — e.g. the per-pod and cross-pod communicators of a
 hierarchical allreduce.
+
+Generations (elastic runtime): every communicator carries a ``generation``
+counter.  Requests issued through it are stamped with that generation; on a
+membership change the elastic controller builds the next-generation group
+with :meth:`Communicator.regroup` and cancels the stale generation's
+in-flight requests (see :mod:`repro.core.requests` and
+``docs/elasticity.md``)::
+
+    comm = Communicator(axes=("data",), sizes=(8,), channel="sim")
+    comm2 = comm.regroup(sizes=(6,))      # 2 ranks lost -> generation 1
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ class Communicator:
     sizes: tuple[int, ...]
     channel: str = "ici"
     name: str = "world"
+    generation: int = 0  # bumped by regroup(); stamps issued requests
 
     def __post_init__(self):
         if len(self.axes) != len(self.sizes):
@@ -65,6 +76,20 @@ class Communicator:
         from .selector import explain as _explain
 
         return _explain(op, nbytes, self.size, channels=channels)
+
+    def regroup(self, sizes: tuple[int, ...] | None = None,
+                axes: tuple[str, ...] | None = None) -> "Communicator":
+        """The next-generation communicator after a membership change:
+        same channel, (possibly) new group shape, ``generation + 1``.
+        Requests issued through the old object remain stamped with the old
+        generation, so ``RequestQueue.cancel_all(old.generation)`` aborts
+        exactly the stale in-flight traffic."""
+        return replace(
+            self,
+            axes=self.axes if axes is None else tuple(axes),
+            sizes=self.sizes if sizes is None else tuple(sizes),
+            generation=self.generation + 1,
+        )
 
     def sub(self, *axes: str) -> "Communicator":
         """Sub-communicator over a subset of this communicator's axes."""

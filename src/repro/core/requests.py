@@ -32,6 +32,18 @@ flow is masks, never python ``if`` — the repo-wide convention), and a
 
 :class:`RequestQueue` is the drain-side helper the
 :class:`~repro.core.scheduler.CommScheduler` builds buckets on.
+
+Cancellation and generations (the elastic-runtime quiesce protocol)
+-------------------------------------------------------------------
+Every request is stamped with the **generation** of the communicator that
+issued it (:attr:`~repro.core.communicator.Communicator.generation`).  When
+membership changes, the elastic controller bumps the generation and calls
+:meth:`RequestQueue.cancel_all` — in-flight requests from the old
+generation are aborted at the transport level (pending trace slots close,
+staged broker keys are discarded) instead of deadlocking on ranks that will
+never answer.  Waiting a cancelled request raises :class:`CancelledError`;
+``test`` reports it complete (MPI_Cancel semantics: cancellation *is* a
+completion).  See ``docs/elasticity.md`` for the full protocol.
 """
 
 from __future__ import annotations
@@ -41,11 +53,15 @@ from typing import Any, Callable, Sequence
 from .transport import Perm, Transport, TransportRequest
 
 
+class CancelledError(RuntimeError):
+    """Waited on a request that was cancelled (stale generation)."""
+
+
 class Request:
     """Handle for one in-flight nonblocking operation.
 
     Carries the op metadata the scheduler and the cost model want
-    (``op``, ``nbytes``, user ``tag``) plus one of:
+    (``op``, ``nbytes``, user ``tag``, ``generation``) plus one of:
 
     * an immediate ``result`` (ops that complete at issue, e.g. on jax);
     * a ``transport_req`` (:class:`TransportRequest`) whose ``wait`` closes
@@ -53,16 +69,37 @@ class Request:
     * a deferred ``thunk`` executed at completion time.
 
     ``finalize`` (if given) post-processes the raw completion value exactly
-    once — e.g. unpadding a fused bucket back into leaves."""
+    once — e.g. unpadding a fused bucket back into leaves.
+
+    Example — deferred completion, idempotent wait, cancellation::
+
+        >>> r = Request("allreduce", nbytes=64, thunk=lambda: 42)
+        >>> r.test()          # never blocks, never forces a thunk
+        False
+        >>> r.wait(), r.wait()  # completes exactly once
+        (42, 42)
+        >>> stale = Request("allreduce", thunk=lambda: 0, generation=3)
+        >>> stale.cancel()
+        True
+        >>> stale.test()      # cancellation IS a completion (MPI_Cancel)
+        True
+        >>> stale.wait()  # doctest: +IGNORE_EXCEPTION_DETAIL
+        Traceback (most recent call last):
+            ...
+        repro.core.requests.CancelledError: allreduce request (generation 3) was cancelled
+    """
 
     def __init__(self, op: str = "op", nbytes: int = 0, tag: Any = None, *,
                  result: Any = None,
                  transport_req: TransportRequest | None = None,
                  thunk: Callable[[], Any] | None = None,
-                 finalize: Callable[[Any], Any] | None = None):
+                 finalize: Callable[[Any], Any] | None = None,
+                 generation: int = 0):
         self.op = op
         self.nbytes = int(nbytes)
         self.tag = tag
+        self.generation = int(generation)
+        self.cancelled = False
         self._result = result
         self._treq = transport_req
         self._thunk = thunk
@@ -73,14 +110,22 @@ class Request:
             self._thunk = lambda: result
 
     def test(self) -> bool:
-        """True iff the operation has completed (never blocks)."""
+        """True iff the operation has completed (never blocks).  A cancelled
+        request counts as completed."""
+        if self.cancelled:
+            return True
         if not self._done and self._treq is not None and self._treq.test():
             self._complete(self._treq._result)
         return self._done
 
     def wait(self):
         """Block until complete; returns the operation's result.  Idempotent
-        — later calls return the same result."""
+        — later calls return the same result.  Raises
+        :class:`CancelledError` if the request was cancelled."""
+        if self.cancelled:
+            raise CancelledError(
+                f"{self.op} request (generation {self.generation}) was cancelled"
+            )
         if not self._done:
             if self._treq is not None:
                 self._complete(self._treq.wait())
@@ -88,6 +133,20 @@ class Request:
                 thunk, self._thunk = self._thunk, None
                 self._complete(thunk())
         return self._result
+
+    def cancel(self) -> bool:
+        """Abort the operation if still in flight: the transport request (if
+        any) is cancelled — closing its trace slot and discarding staged
+        broker keys — and the thunk/finalize are dropped unrun.  Returns
+        True iff this call cancelled it (False: already completed)."""
+        if self._done:
+            return False
+        if self._treq is not None:
+            self._treq.cancel()
+        self._result = self._treq = self._thunk = self._finalize = None
+        self._done = True
+        self.cancelled = True
+        return True
 
     def _complete(self, value):
         if self._finalize is not None:
@@ -98,16 +157,26 @@ class Request:
 
 
 def wait(req: Request):
+    """Functional alias for :meth:`Request.wait` (MPI_Wait)."""
     return req.wait()
 
 
 def test(req: Request) -> bool:
+    """Functional alias for :meth:`Request.test` (MPI_Test)."""
     return req.test()
 
 
 def waitall(reqs: Sequence[Request]) -> list:
     """Complete every request; results in *request* order (MPI_Waitall),
-    regardless of the order completions actually happen in."""
+    regardless of the order completions actually happen in.
+
+    Example::
+
+        >>> a, b = Request("x", thunk=lambda: "a"), Request("x", thunk=lambda: "b")
+        >>> _ = b.wait()            # completion order differs from issue order
+        >>> waitall([a, b])         # results are positional anyway
+        ['a', 'b']
+    """
     return [r.wait() for r in reqs]
 
 
@@ -116,7 +185,20 @@ class RequestQueue:
 
     The scheduler pushes one request per issued bucket and drains the queue
     at the end of the step; ``waitall`` preserves issue order so unpacking
-    is deterministic."""
+    is deterministic.  On a membership change the elastic controller calls
+    :meth:`cancel_all` instead of draining — stale-generation requests are
+    aborted and dropped rather than waited on ranks that will never answer.
+
+    Example::
+
+        >>> q = RequestQueue()
+        >>> for gen in (0, 0, 1):
+        ...     _ = q.push(Request("allreduce", thunk=lambda: 1, generation=gen))
+        >>> q.cancel_all(generation=0)   # quiesce: abort the old generation
+        2
+        >>> len(q), q.waitall()          # the generation-1 request survives
+        (1, [1])
+    """
 
     def __init__(self):
         self._reqs: list[Request] = []
@@ -133,6 +215,7 @@ class RequestQueue:
 
     @property
     def pending(self) -> int:
+        """Number of queued requests that have not completed yet."""
         return sum(0 if r.test() else 1 for r in self._reqs)
 
     def waitall(self) -> list:
@@ -142,6 +225,21 @@ class RequestQueue:
         self._reqs = []
         return out
 
+    def cancel_all(self, generation: int | None = None) -> int:
+        """Quiesce: cancel and drop every queued request stamped with
+        ``generation`` or older (``None``: all of them).  Requests from newer
+        generations stay queued.  Already-completed requests are dropped
+        without counting.  Returns the number actually cancelled."""
+        keep, n = [], 0
+        for r in self._reqs:
+            if generation is not None and r.generation > generation:
+                keep.append(r)
+                continue
+            if r.cancel():
+                n += 1
+        self._reqs = keep
+        return n
+
 
 # ---------------------------------------------------------------------------
 # Nonblocking collectives — issue now, Request completes later
@@ -149,13 +247,15 @@ class RequestQueue:
 
 
 def _issue(op: str, nbytes: int, run: Callable[[], Any],
-           finalize: Callable[[Any], Any] | None = None) -> Request:
+           finalize: Callable[[Any], Any] | None = None,
+           generation: int = 0) -> Request:
     """All our transports move the bytes at issue time (lockstep software
     channels) or leave scheduling to XLA (mesh channels), so the collective
     executes here and the Request carries the finished value; ``wait`` is
     the synchronization point the caller orders the program around (and
     where ``finalize`` — e.g. bucket unpacking — runs)."""
-    return Request(op, nbytes, result=run(), finalize=finalize)
+    return Request(op, nbytes, result=run(), finalize=finalize,
+                   generation=generation)
 
 
 def _payload_bytes(x) -> int:
@@ -176,7 +276,7 @@ def iallreduce(x, comm, op="add", algorithm="auto", objective="time",
     return _issue("allreduce", _payload_bytes(x),
                   lambda: C.allreduce(x, comm, op=op, algorithm=algorithm,
                                       objective=objective, pipeline=pipeline),
-                  finalize=finalize)
+                  finalize=finalize, generation=comm.generation)
 
 
 def ireduce_scatter(x, comm, op="add", algorithm="auto",
@@ -188,7 +288,7 @@ def ireduce_scatter(x, comm, op="add", algorithm="auto",
     return _issue("reduce_scatter", _payload_bytes(x),
                   lambda: C.reduce_scatter(x, comm, op=op, algorithm=algorithm,
                                            pipeline=pipeline),
-                  finalize=finalize)
+                  finalize=finalize, generation=comm.generation)
 
 
 def iallgather(chunk, comm, algorithm="auto",
@@ -198,7 +298,7 @@ def iallgather(chunk, comm, algorithm="auto",
 
     return _issue("allgather", _payload_bytes(chunk),
                   lambda: C.allgather(chunk, comm, algorithm=algorithm),
-                  finalize=finalize)
+                  finalize=finalize, generation=comm.generation)
 
 
 # ---------------------------------------------------------------------------
@@ -242,3 +342,27 @@ def irecv(t: Transport, tag: Any = 0) -> Request:
             f"{sorted(map(repr, box))})"
         ) from None
     return Request("recv", 0, tag, transport_req=treq)
+
+
+def abort_mailbox(t: Transport) -> int:
+    """Transport-level quiesce: cancel every in-flight :func:`isend` whose
+    :func:`irecv` has not claimed it (the sends a dead rank will never
+    receive) and empty the mailbox.  Each cancel closes the channel's
+    pending trace slot and, on mediated transports, discards the staged
+    broker keys.  Returns the number of aborted sends.
+
+    Example::
+
+        >>> import numpy as np
+        >>> from repro.core.transport import SimTransport
+        >>> t = SimTransport(2)
+        >>> _ = isend(np.ones((2, 4), np.float32), t, [(0, 1), (1, 0)], tag=9)
+        >>> abort_mailbox(t)
+        1
+        >>> t.trace.pending
+        0
+    """
+    box = _mailbox(t)
+    n = sum(1 for treq in box.values() if treq.cancel())
+    box.clear()
+    return n

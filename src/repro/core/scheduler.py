@@ -25,11 +25,22 @@ tree over ranks — so bucketed and blocking results are bit-exact, which
 ``tests/test_requests.py`` asserts on both the sim and mesh transports.
 (Ring rotates each chunk's rank order with its position, so ring results
 agree only up to float associativity.)
+
+Elastic/straggler integration: ``drain`` records a **per-request wait-time
+trace** (``wait_trace``) — how long each bucket's ``wait`` blocked.  The
+straggler policy turns that into a communication-slowdown estimate
+(:meth:`repro.runtime.straggler.StragglerPolicy.comm_slowdown`), and
+:meth:`CommScheduler.replan` re-derives the bucket size under that slowdown
+(a slow rank stretches every collective, moving the α-β optimum).  On a
+membership change the elastic controller calls :meth:`CommScheduler.abort`
+— open buckets are discarded and stale-generation in-flight requests are
+cancelled at the transport level instead of deadlocking the drain.
 """
 
 from __future__ import annotations
 
 import math
+import time as _time
 from typing import Any
 
 from .communicator import Communicator
@@ -58,6 +69,21 @@ class CommScheduler:
     kept on ``self.plan`` for introspection/`--explain`).  Buckets never mix
     dtypes — mixing would force casts and change bits vs. the blocking
     per-dtype fused path.
+
+    Runnable example (sim channel; arrays carry the stacked ``[P, ...]``
+    rank axis)::
+
+        >>> import numpy as np
+        >>> from repro.core.communicator import Communicator
+        >>> comm = Communicator(axes=("data",), sizes=(4,), channel="sim")
+        >>> sched = CommScheduler(comm, algorithm="recursive_doubling",
+        ...                       bucket_bytes=1 << 20)
+        >>> sched.submit("layer0", np.ones((4, 8), np.float32))
+        >>> out = sched.drain()
+        >>> bool((out["layer0"] == 4.0).all())   # summed over the 4 ranks
+        True
+        >>> len(sched.wait_trace)                # one bucket was drained
+        1
     """
 
     def __init__(self, comm: Communicator, op: str = "add",
@@ -74,6 +100,12 @@ class CommScheduler:
         self.objective = objective
         self.queue = queue if queue is not None else RequestQueue()
         self.plan: BucketPlan | None = None
+        self._total_hint = total_bytes_hint
+        self._compute_s = compute_s
+        #: (op, nbytes, seconds blocked) per drained request — the raw
+        #: signal straggler detection consumes (slow ranks show up as
+        #: stretched waits on every bucket they participate in)
+        self.wait_trace: list[tuple[str, int, float]] = []
         if bucket_bytes is None and total_bytes_hint:
             self.plan = bucket_plan(
                 "allreduce", total_bytes_hint, comm.size,
@@ -147,12 +179,50 @@ class CommScheduler:
 
     def drain(self) -> dict[str, Any]:
         """Flush, wait all in-flight requests (issue order), and return
-        ``{name: reduced tensor}`` for everything submitted so far."""
+        ``{name: reduced tensor}`` for everything submitted so far.  Each
+        request's blocked-wait time is appended to :attr:`wait_trace`."""
         self.flush()
-        self.queue.waitall()  # each request's finalize fills self._results
+        for req in self.queue:  # each request's finalize fills self._results
+            t0 = _time.perf_counter()
+            req.wait()
+            self.wait_trace.append((req.op, req.nbytes,
+                                    _time.perf_counter() - t0))
+        self.queue.waitall()  # idempotent: empties the (completed) queue
         out, self._results = self._results, {}
         self._submitted.clear()  # names are reusable in the next cycle
         return out
+
+    def abort(self, generation: int | None = None) -> int:
+        """Quiesce for a membership change: discard the open (unissued)
+        buckets, cancel queued in-flight requests stamped ``generation`` or
+        older (``None``: all), and forget this cycle's partial results —
+        the regrouped communicator will redo the sync from the checkpoint.
+        Returns the number of requests cancelled."""
+        self._open.clear()
+        self._open_bytes.clear()
+        n = self.queue.cancel_all(generation)
+        self._results.clear()
+        self._submitted.clear()
+        return n
+
+    def replan(self, slowdown: float) -> BucketPlan | None:
+        """Re-derive the bucket plan under an observed communication
+        ``slowdown`` factor (>= 1; from
+        :meth:`~repro.runtime.straggler.StragglerPolicy.comm_slowdown`).
+        A straggling rank stretches every bucket's wire time by ``slowdown``
+        while the compute window is unchanged, so the α-β optimum moves —
+        typically toward bigger buckets (each collective's stretched α is
+        paid fewer times).  No-op (returns None) when the scheduler was
+        pinned to an explicit ``bucket_bytes``."""
+        if not self._total_hint:
+            return None
+        self.plan = bucket_plan(
+            "allreduce", self._total_hint, self.comm.size,
+            channels=(self.comm.channel,), objective=self.objective,
+            compute_s=self._compute_s, slowdown=float(slowdown),
+        )
+        self.bucket_bytes = self.plan.bucket_bytes
+        return self.plan
 
     def sync_tree(self, tree):
         """Bucketed analogue of ``collectives.allreduce_tree``: submit the

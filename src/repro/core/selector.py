@@ -205,6 +205,7 @@ class BucketPlan:
     time_s: float
     price_usd: float
     compute_s: float = 0.0
+    slowdown: float = 1.0  # observed comm-slowdown factor the plan priced in
 
 
 def _exposed_time(n: int, t_bucket: float, compute_s: float) -> float:
@@ -225,9 +226,16 @@ def bucket_plan(
     compute_s: float = 0.0,
     bucket_sizes: tuple[int, ...] = BUCKET_SIZES,
     price_weight: float = 0.5,
+    slowdown: float = 1.0,
 ) -> BucketPlan:
     """Choose the bucket size for coalescing a ``total_bytes`` payload that
     becomes ready incrementally (per-layer gradients) into fused collectives.
+
+    ``slowdown`` (>= 1) stretches every candidate's wire time by an observed
+    communication-slowdown factor — the straggler-mitigation hook:
+    :meth:`repro.core.scheduler.CommScheduler.replan` re-plans with the
+    factor the per-request wait-time trace implies, while the compute window
+    is unaffected (the straggler slows the wire, not this rank's backward).
 
     The α-β trade the plan encodes: **latency-bound** payloads (small, or a
     high-α channel) want few big buckets — every extra bucket pays the full
@@ -239,6 +247,7 @@ def bucket_plan(
     the blocking ``allreduce_tree`` behaviour.
     """
     total = max(1.0, float(total_bytes))
+    slowdown = max(1.0, float(slowdown))
     sizes = sorted({int(b) for b in bucket_sizes if 0 < b < total} | {int(total)})
     best: BucketPlan | None = None
     for B in sizes:
@@ -247,10 +256,13 @@ def bucket_plan(
         cand = select(op, per_bucket, P, channels=channels,
                       objective=objective, mem_gib=mem_gib,
                       price_weight=price_weight)
-        t = _exposed_time(n, cand.time_s, compute_s)
-        price = n * cand.price_usd
-        plan = BucketPlan(op, total, P, B, n, cand, cand.time_s, t, price,
-                          compute_s)
+        t_bucket = cand.time_s * slowdown
+        t = _exposed_time(n, t_bucket, compute_s)
+        # occupancy pricing scales with actual wall time, so the slowdown
+        # stretches the dollar cost too (price/weighted replans must react)
+        price = n * cand.price_usd * slowdown
+        plan = BucketPlan(op, total, P, B, n, cand, t_bucket, t, price,
+                          compute_s, slowdown)
         key = {"time": t, "price": price,
                "weighted": (1 - price_weight) * t + price_weight * price}[objective]
         best_key = None if best is None else {
@@ -300,6 +312,195 @@ def explain_bucket_plan(
         f"{chosen.candidate.channel}/{chosen.candidate.algorithm} "
         f"depth={chosen.candidate.depth}: exposed {chosen.time_s*1e6:.1f}us, "
         f"${chosen.price_usd:.3e}"
+    )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Rescale planning — continue degraded vs. regroup now (the elastic runtime's
+# cost question; see runtime/elastic.py and docs/elasticity.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RescaleOption:
+    """One priced answer to "a rank died — what now?".
+
+    ``step_time_s`` is the modeled per-step time (compute + exposed grad
+    sync) under this option; ``restart_s`` the one-time cost of getting
+    there (0 for continuing); ``total_s``/``price_usd`` the run-to-horizon
+    totals the plan is argmin'd over."""
+
+    action: str  # 'continue-degraded' | 'regroup-pow2' | 'regroup-full'
+    world: int  # active ranks under this option
+    algorithm: str  # grad-sync algorithm the selector picked at that size
+    step_time_s: float
+    restart_s: float
+    total_s: float
+    price_usd: float
+    note: str = ""
+
+
+@dataclass(frozen=True)
+class RescalePlan:
+    """The full continue-vs-regroup table plus the chosen row."""
+
+    P: int
+    survivors: int
+    steps_remaining: int
+    options: tuple[RescaleOption, ...]
+    best: RescaleOption
+
+
+def restart_cost_s(
+    ckpt_bytes: float,
+    world: int,
+    steps_since_ckpt: int = 0,
+    healthy_step_s: float = 0.0,
+    form_s: float = 1.0,
+    restore_channel: str = "host",
+) -> float:
+    """The new restart-cost term of the rescale model: what one regroup
+    costs before the first productive step at the new size.
+
+    Three parts: group re-formation (``form_s`` — membership joins +
+    controller overhead; the paper's §3.1 timer bounds it, this prices its
+    expectation), resharding (every rank re-reads its ``ckpt_bytes/world``
+    checkpoint slice through the ``restore_channel``'s α-β model, in
+    parallel), and lost work (``steps_since_ckpt`` healthy steps redone —
+    everything since the last committed checkpoint re-executes)."""
+    spec = get_channel(restore_channel).spec
+    reshard = spec.p2p_time(ckpt_bytes / max(1, world)) if ckpt_bytes else 0.0
+    return float(form_s) + reshard + steps_since_ckpt * healthy_step_s
+
+
+def rescale_plan(
+    nbytes: float,
+    P: int,
+    survivors: int,
+    steps_remaining: int,
+    compute_s: float,
+    channels: tuple[str, ...] | None = None,
+    ckpt_bytes: float = 0.0,
+    steps_since_ckpt: int = 0,
+    slowdown: float = 2.0,
+    form_s: float = 1.0,
+    restore_channel: str = "host",
+    objective: str = "time",
+    price_weight: float = 0.5,
+) -> RescalePlan:
+    """Price "continue degraded vs. regroup now" after losing ranks.
+
+    ``nbytes`` is the per-rank gradient payload of one step, ``compute_s``
+    the healthy per-step compute at the full world ``P``.  Three options
+    are priced with the same α-β(+γ) channel models the selector uses for
+    everything else, plus the :func:`restart_cost_s` term:
+
+    * **continue-degraded** — keep the ``P``-rank group: the dead ranks'
+      microbatches re-execute on backup buddies (compute doubles on the
+      critical path — see ``StragglerPolicy.backup_plan``) and every
+      collective stretches by ``slowdown`` (the group is only as fast as
+      its slowest member).  No restart cost.
+    * **regroup-pow2** — pow2-floor of the survivors is active (fast-path
+      collectives, the rest idle as spares): pay the restart once, then
+      compute scales by ``P/world`` (same global batch on fewer ranks).
+    * **regroup-full** — every survivor stays active at a non-pow2 size
+      (ring / recursive-doubling-with-spares): least compute inflation,
+      non-pow2 collective schedule.
+
+    Dollar cost is chip occupancy of every *surviving* chip (idle spares
+    are still reserved) over the option's total time.  ``best`` is the
+    argmin under ``objective``; ``explain_rescale_plan`` renders the table
+    that ``dryrun --explain`` prints."""
+    from .pricing import P_CHIP_S
+
+    survivors = int(survivors)
+    steps = max(0, int(steps_remaining))
+    if not 0 < survivors <= P:
+        raise ValueError(f"survivors {survivors} outside (0, {P}]")
+
+    def sync_time(world: int) -> tuple[float, str]:
+        cand = select("allreduce", nbytes, world, channels=channels,
+                      objective="time") if world > 1 else None
+        return (cand.time_s, cand.algorithm) if cand else (0.0, "-")
+
+    healthy_comm, algo_P = sync_time(P)
+    healthy_step = compute_s + healthy_comm
+
+    options = []
+    # continue degraded: full-world group limps with backups + stretched wire
+    if survivors < P:
+        t_step = 2.0 * compute_s + healthy_comm * max(1.0, slowdown)
+        note = f"buddies re-execute {P - survivors} lost microbatch(es)"
+    else:
+        t_step, note = healthy_step, "no failure: healthy baseline"
+    total = steps * t_step
+    options.append(RescaleOption(
+        "continue-degraded", P, algo_P, t_step, 0.0, total,
+        survivors * total * P_CHIP_S, note))
+
+    worlds = []
+    p2 = 1 << (survivors.bit_length() - 1)
+    worlds.append(("regroup-pow2", p2,
+                   f"{survivors - p2} spare(s) idle" if survivors - p2
+                   else "all survivors on the pow2 fast path"))
+    if p2 != survivors:
+        worlds.append(("regroup-full", survivors,
+                       "all survivors active (non-pow2 schedule)"))
+    for action, world, wnote in worlds:
+        comm, algo = sync_time(world)
+        t_step = compute_s * (P / world) + comm
+        restart = restart_cost_s(ckpt_bytes, world, steps_since_ckpt,
+                                 healthy_step, form_s, restore_channel)
+        total = restart + steps * t_step
+        options.append(RescaleOption(
+            action, world, algo, t_step, restart, total,
+            survivors * total * P_CHIP_S, wnote))
+
+    def key(o: RescaleOption) -> float:
+        if objective == "time":
+            return o.total_s
+        if objective == "price":
+            return o.price_usd
+        if objective == "weighted":
+            return (1 - price_weight) * o.total_s + price_weight * o.price_usd
+        raise ValueError(f"unknown objective {objective!r}")
+
+    opts = tuple(options)
+    return RescalePlan(P, survivors, steps, opts, min(opts, key=key))
+
+
+def explain_rescale_plan(
+    nbytes: float,
+    P: int,
+    survivors: int,
+    steps_remaining: int,
+    compute_s: float,
+    channels: tuple[str, ...] | None = None,
+    **kwargs,
+) -> str:
+    """The rescale decision as a table, chosen row marked — what
+    ``launch/dryrun.py --explain`` prints under the bucket plan."""
+    plan = rescale_plan(nbytes, P, survivors, steps_remaining, compute_s,
+                        channels=channels, **kwargs)
+    lines = [
+        f"rescale plan: {survivors}/{P} ranks alive, "
+        f"{plan.steps_remaining} steps to go, "
+        f"grad sync {nbytes/1e6:.1f} MB/rank, compute {compute_s*1e3:.2f} ms/step",
+        f"{'':2s}{'action':18s} {'world':>5s} {'algorithm':20s} "
+        f"{'t/step':>10s} {'restart':>10s} {'total':>10s} {'price $':>12s}",
+        "-" * 94,
+    ]
+    for o in plan.options:
+        mark = "*" if o is plan.best else " "
+        lines.append(
+            f"{mark:2s}{o.action:18s} {o.world:5d} {o.algorithm:20s} "
+            f"{o.step_time_s*1e3:8.2f}ms {o.restart_s*1e3:8.2f}ms "
+            f"{o.total_s:9.2f}s {o.price_usd:12.3e}  {o.note}"
+        )
+    lines.append(
+        f"-> {plan.best.action} at world={plan.best.world}: "
+        f"{plan.best.total_s:.2f}s total, ${plan.best.price_usd:.3e}"
     )
     return "\n".join(lines)
 

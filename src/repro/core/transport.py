@@ -61,6 +61,19 @@ import numpy as np
 Perm = Sequence[tuple[int, int]]
 
 
+class RankFailure(RuntimeError):
+    """A transport operation touched a rank that has failed.
+
+    Raised by the software channels when fault injection
+    (:meth:`SimTransport.kill`) has marked a participant dead.  Carries the
+    failed ``rank`` so the elastic runtime can mark it in
+    :class:`~repro.runtime.membership.Membership` and regroup."""
+
+    def __init__(self, rank: int, message: str | None = None):
+        super().__init__(message or f"rank {rank} failed mid-collective")
+        self.rank = rank
+
+
 def is_pow2(n: int) -> bool:
     return n > 0 and (n & (n - 1)) == 0
 
@@ -80,12 +93,22 @@ class TransportRequest:
     ``test()`` reports completion without blocking.  On lockstep software
     channels the data movement happens at issue time — what ``wait``
     completes is the *trace accounting* (the pending slot is closed), which
-    is exactly the part the α-β model prices."""
+    is exactly the part the α-β model prices.
 
-    def __init__(self, result, on_wait: Callable | None = None):
+    ``cancel()`` is the abort half of the elastic-runtime quiesce protocol:
+    an in-flight request is retired *without* delivering its payload — the
+    channel's ``on_cancel`` hook closes the trace's pending slot (and, on
+    mediated channels, discards the staged broker keys so nothing leaks).
+    Waiting a cancelled request returns ``None``; the user-facing
+    :class:`~repro.core.requests.Request` raises instead."""
+
+    def __init__(self, result, on_wait: Callable | None = None,
+                 on_cancel: Callable | None = None):
         self._result = result
         self._on_wait = on_wait
+        self._on_cancel = on_cancel
         self._done = on_wait is None
+        self.cancelled = False
 
     def test(self) -> bool:
         return self._done
@@ -96,6 +119,20 @@ class TransportRequest:
             self._result = on_wait(self._result)
             self._done = True
         return self._result
+
+    def cancel(self) -> bool:
+        """Abort the request if still in flight.  Returns True iff this call
+        cancelled it (False: already completed — MPI_Cancel semantics)."""
+        if self._done:
+            return False
+        on_cancel = self._on_cancel
+        self._on_wait = self._on_cancel = None
+        self._result = None
+        self._done = True
+        self.cancelled = True
+        if on_cancel is not None:
+            on_cancel()
+        return True
 
 
 class Transport:
@@ -276,7 +313,13 @@ class ChannelTrace:
 
 
 class SimTransport(Transport):
-    """All ranks in lockstep on stacked ``[P, *shape]`` numpy arrays."""
+    """All ranks in lockstep on stacked ``[P, *shape]`` numpy arrays.
+
+    Fault injection: :meth:`kill` marks a rank failed (optionally after a
+    number of further rounds, to land the failure mid-collective); any
+    exchange whose pair list then touches the dead rank raises
+    :class:`RankFailure`.  :meth:`revive` clears the mark — the membership
+    flap (down-then-up) path of the elastic runtime."""
 
     xp = np
     stacked = True
@@ -284,6 +327,42 @@ class SimTransport(Transport):
     def __init__(self, size: int):
         self.size = int(size)
         self.trace = ChannelTrace()
+        self._dead: set[int] = set()
+        self._kill_at: dict[int, int] = {}  # rank -> rounds until failure
+
+    # fault injection -------------------------------------------------------
+    def kill(self, rank: int, after_rounds: int = 0):
+        """Mark ``rank`` failed.  ``after_rounds=k``: the next ``k`` calls to
+        :meth:`ppermute_start` still succeed; the failure surfaces on the
+        one after that (so a test can land it mid-allreduce)."""
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} outside [0, {self.size})")
+        if after_rounds <= 0:
+            self._dead.add(rank)
+        else:
+            self._kill_at[rank] = int(after_rounds)
+
+    def revive(self, rank: int):
+        """Clear a failure mark (the rank came back — membership flap)."""
+        self._dead.discard(rank)
+        self._kill_at.pop(rank, None)
+
+    @property
+    def dead(self) -> frozenset:
+        return frozenset(self._dead)
+
+    def _check_failures(self, pairs: Perm):
+        for r in list(self._kill_at):
+            if self._kill_at[r] <= 0:  # grace rounds used up: now it dies
+                del self._kill_at[r]
+                self._dead.add(r)
+            else:
+                self._kill_at[r] -= 1
+        if self._dead:
+            for src, dst in pairs:
+                if src in self._dead or dst in self._dead:
+                    rank = src if src in self._dead else dst
+                    raise RankFailure(rank)
 
     # stacking helpers ------------------------------------------------------
     def stack(self, per_rank: Sequence[np.ndarray]) -> np.ndarray:
@@ -299,16 +378,18 @@ class SimTransport(Transport):
     def ppermute_start(self, x, perm: Perm) -> TransportRequest:
         # Lockstep semantics: the data moves at issue time (every rank is
         # in this call); wait() closes the trace's pending slot.
+        pairs = list(perm)
+        self._check_failures(pairs)
         out = np.zeros_like(x)
         max_sent = 0
         itemsize = x.dtype.itemsize
         per_msg = int(np.prod(x.shape[1:])) * itemsize
-        pairs = list(perm)
         for src, dst in pairs:
             out[dst] = x[src]
             max_sent = max(max_sent, per_msg)
         self.trace.issue(max_sent, len(pairs))
-        return TransportRequest(out, on_wait=self._finish)
+        return TransportRequest(out, on_wait=self._finish,
+                                on_cancel=self.trace.complete)
 
     def _finish(self, out):
         self.trace.complete()
@@ -378,6 +459,7 @@ class BrokerStats:
     puts: int = 0
     gets: int = 0
     polls: int = 0  # GET attempts before data was present (pull channel)
+    aborts: int = 0  # staged messages discarded by a cancelled exchange
     put_bytes: int = 0
     get_bytes: int = 0
     live_keys: int = 0
@@ -416,6 +498,16 @@ class HostBroker:
         self.stats.live_keys = len(self._store)
         return value
 
+    def discard(self, key) -> bool:
+        """Drop a staged message without downloading it (cancelled exchange:
+        no GET is billed, but the abort is counted).  Returns True iff the
+        key was present."""
+        present = self._store.pop(key, None) is not None
+        if present:
+            self.stats.aborts += 1
+            self.stats.live_keys = len(self._store)
+        return present
+
 
 class HostTransport(SimTransport):
     """Mediated transport: lockstep like :class:`SimTransport`, but every
@@ -436,10 +528,11 @@ class HostTransport(SimTransport):
         self._seq = 0  # per-transport round counter namespacing broker keys
 
     def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        pairs = list(perm)
+        self._check_failures(pairs)
         self._seq += 1
         seq = self._seq
         per_msg = int(np.prod(x.shape[1:])) * x.dtype.itemsize
-        pairs = list(perm)
         for src, dst in pairs:  # upload hop (all senders in parallel)
             self.broker.put((id(self), seq, src, dst), x[src])
         sent = per_msg if pairs else 0
@@ -452,7 +545,15 @@ class HostTransport(SimTransport):
             self.trace.complete()
             return out
 
-        return TransportRequest(np.zeros_like(x), on_wait=finish)
+        def abort():
+            # cancelled before the GET hop: discard the staged uploads so the
+            # broker never leaks keys (and never collides on a regroup replay)
+            for src, dst in pairs:
+                self.broker.discard((id(self), seq, src, dst))
+            self.trace.complete()
+
+        return TransportRequest(np.zeros_like(x), on_wait=finish,
+                                on_cancel=abort)
 
 
 # ---------------------------------------------------------------------------

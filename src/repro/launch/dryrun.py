@@ -462,6 +462,15 @@ def main():
         # backward ≈ 2/3 of the 6·N·tokens train FLOPs, spread over 256 chips
         backward_s = (2 / 3) * mfl / 256 / V5E.peak_flops_bf16
         print(f"\n{explain_bucket_plan('allreduce', nbytes, 16, channels=('ici',), compute_s=backward_s)}")
+        # elastic rescale plan: one of the 16 ranks just died — continue
+        # degraded (backup buddies + stretched collectives) or pay the
+        # restart (reform + reshard the checkpoint + redo the steps since
+        # the last commit) to regroup at 15/8 ranks now?
+        from ..core.selector import explain_rescale_plan
+
+        step_s = mfl / 256 / V5E.peak_flops_bf16  # full fwd+bwd compute
+        ckpt_bytes = lm.count_params(cfg) * (2 + 8)  # bf16 params + f32 m/v
+        print(f"\n{explain_rescale_plan(nbytes, 16, 15, steps_remaining=1000, compute_s=step_s, channels=('ici',), ckpt_bytes=ckpt_bytes, steps_since_ckpt=25)}")
         return
 
     if args.all or args.grid:

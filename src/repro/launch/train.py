@@ -8,6 +8,17 @@ container has one real device); ``--reduced`` trains the smoke-sized config
 of the same family for real.  Supports both distribution modes, gradient
 compression, ZeRO-1, checkpoint/restart (``--ckpt-dir``), and resumes
 automatically from the latest committed checkpoint.
+
+Elastic demo: ``--elastic`` arms the runtime's heal path, and
+``--kill-rank R --kill-at-step N`` injects a deterministic failure —
+at step N rank R is declared dead, the :class:`ElasticController` runs
+quiesce → regroup (``--regroup`` strategy) → reshard (latest committed
+checkpoint, or re-init when none), and the loop resumes at the restored
+step::
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
+        --steps 20 --ckpt-dir /tmp/ck --ckpt-every 5 \
+        --elastic --kill-rank 0 --kill-at-step 12
 """
 
 from __future__ import annotations
@@ -53,6 +64,14 @@ def main():
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out-json", default="")
+    ap.add_argument("--elastic", action="store_true",
+                    help="arm the elastic heal path (membership + controller)")
+    ap.add_argument("--regroup", default="pow2_floor",
+                    choices=["auto", "pow2_floor", "ring", "recursive_doubling"],
+                    help="group-build strategy for heals (algorithms.build_group)")
+    ap.add_argument("--kill-rank", type=int, default=None,
+                    help="inject: declare this rank dead at --kill-at-step")
+    ap.add_argument("--kill-at-step", type=int, default=None)
     args = ap.parse_args()
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
@@ -95,9 +114,66 @@ def main():
             except FileNotFoundError:
                 pass
 
+        # elastic runtime: membership + controller around the loop (heals
+        # rebuild the step function and reshard from the latest commit)
+        controller = None
+        state = {"params": params, "opt": opt_state}
+        if args.elastic:
+            from ..runtime import ElasticController, GroupError, Membership
+
+            n_ranks = args.data_axis * args.model_axis
+            membership = Membership(expected=n_ranks)
+            for r in range(n_ranks):
+                membership.join(r)
+
+            def rebuild(dp):
+                nonlocal step_fn
+                # single-host smoke path: the mesh keeps its devices; the
+                # step function is rebuilt (multi-device rescale is
+                # exercised by Trainer and tests/test_elastic.py)
+                step_fn, _, _ = make_train_step(cfg, tcfg, mesh, multi_pod=False)
+
+            def restore():
+                if ckpt is not None:
+                    ckpt.wait()
+                    try:
+                        target = {"params": state["params"], "opt": state["opt"]}
+                        restored, s = ckpt.restore_latest(target)
+                        state.update(restored)
+                        return s
+                    except FileNotFoundError:
+                        pass
+                print("heal: no committed checkpoint; continuing from live "
+                      "state (bounded-staleness restart)")
+                return state["step_cursor"]
+
+            controller = ElasticController(
+                membership=membership, rebuild=rebuild, restore=restore,
+                strategy=args.regroup,
+            )
+
         history = []
         t_start = time.perf_counter()
-        for step in range(start, start + args.steps):
+        step, end = start, start + args.steps
+        while step < end:
+            state["step_cursor"] = step
+            if controller is not None:
+                try:
+                    for r in sorted(membership.group()):
+                        membership.heartbeat(r)
+                    if args.kill_rank is not None and step == args.kill_at_step:
+                        membership.mark_failed(args.kill_rank)
+                        args.kill_rank = None  # one-shot injection
+                    membership.check_alive()
+                except GroupError as e:
+                    print(f"step {step:5d} FAILURE: {e}")
+                    step = controller.heal()
+                    params, opt_state = state["params"], state["opt"]
+                    h = controller.history[-1]
+                    print(f"healed: regrouped to dp={h['dp']} "
+                          f"({h['strategy']}, spares={h['spares']}), "
+                          f"resuming at step {step}")
+                    continue
             batch = jax.tree.map(
                 jax.numpy.asarray,
                 synthetic_batch(dcfg, cfg, args.batch, args.seq, step),
@@ -108,11 +184,19 @@ def main():
             dt = time.perf_counter() - t0
             m = {k: float(v) for k, v in metrics.items()}
             history.append({"step": step, "time_s": dt, **m})
-            if step % args.log_every == 0 or step == start + args.steps - 1:
+            state["params"], state["opt"] = params, opt_state
+            if step % args.log_every == 0 or step == end - 1:
                 print(f"step {step:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
                       f"lr {m['lr']:.2e} gnorm {m.get('grad_norm', 0):.2f} {dt*1e3:.0f}ms")
             if ckpt is not None and (step + 1) % args.ckpt_every == 0:
-                ckpt.save_async({"params": params, "opt": opt_state}, step + 1)
+                world = (len(membership.group()) if controller is not None
+                         else args.data_axis * args.model_axis)
+                ckpt.save_async(
+                    {"params": params, "opt": opt_state}, step + 1,
+                    extra={"generation": controller.generation if controller
+                           else 0, "world": world},
+                )
+            step += 1
         if ckpt is not None:
             ckpt.wait()
 

@@ -1,5 +1,15 @@
-from .elastic import ElasticController
+"""Elastic fault-tolerant runtime: membership timers, the elastic
+controller (detect → quiesce → regroup → reshard → resume), and straggler
+policy.  See ``docs/elasticity.md`` for the protocol walkthrough."""
+
+from .elastic import ElasticController, pow2_floor
 from .membership import GroupError, Membership
 from .straggler import StragglerPolicy
 
-__all__ = ["Membership", "GroupError", "ElasticController", "StragglerPolicy"]
+__all__ = [
+    "Membership",
+    "GroupError",
+    "ElasticController",
+    "StragglerPolicy",
+    "pow2_floor",
+]

@@ -1,19 +1,69 @@
-"""Elastic rescale: rebuild the communicator from survivors and resume.
+"""Elastic fault-tolerant runtime: detect → quiesce → regroup → reshard → resume.
 
-Flow (driven by the trainer when ``Membership.check_alive`` raises):
+The paper delegates fault tolerance to the membership timer (§3.1) plus
+checkpoint/restart; the serverless elasticity literature (PAPERS.md:
+"Exploiting Inherent Elasticity", "FaaS Is Not Enough") shows elasticity
+only pays off when regroup/rescale is a first-class, cheap operation.  This
+module is that operation for the trainer.  One heal is five phases:
 
-    1. survivors = membership.survivors()
-    2. new data-parallel degree = largest power of two <= len(survivors)
-       (keeps every collective algorithm's fast path; spare survivors idle
-       until the next rescale up)
-    3. rebuild mesh/communicators at the new size
-    4. restore the latest committed checkpoint with the new shardings
-       (checkpoint/store.py re-device_puts every leaf -> resharding is free)
-    5. data pipeline resumes at the restored step (stateless addressing)
+1. **detect** — :meth:`Membership.check_alive` raises
+   :class:`~repro.runtime.membership.GroupError` on a missed heartbeat, or
+   the transport raises :class:`~repro.core.transport.RankFailure`
+   mid-collective (which :meth:`ElasticController.step_or_heal` converts
+   into a membership mark).
+2. **quiesce** — the injected ``quiesce`` hook cancels in-flight
+   communication: :meth:`CommScheduler.abort
+   <repro.core.scheduler.CommScheduler.abort>` discards open buckets and
+   ``RequestQueue.cancel_all`` aborts the stale generation's requests at
+   the transport level (pending trace slots close, staged broker keys are
+   discarded) — nothing deadlocks waiting on a dead rank.
+3. **regroup** — :func:`~repro.core.algorithms.build_group` lays the
+   survivors out as the next group (pow2-floor with idle spares, full-size
+   ring, or recursive-doubling-with-spares); the controller bumps its
+   ``generation``, commits the change with :meth:`Membership.reform`, and
+   the ``rebuild`` callback reconstructs mesh/communicators/step functions
+   at the new size.
+4. **reshard** — the ``restore`` callback reloads the latest committed
+   checkpoint onto the new topology (``checkpoint/store.py`` re-device_puts
+   every leaf, so resharding is the same code path) and returns the step to
+   resume from.
+5. **resume** — the training loop continues at the restored step; the
+   decision of *whether* to regroup now or limp along degraded is priced by
+   :func:`repro.core.selector.rescale_plan`.
 
-The controller is pure policy — mesh/step rebuilding is delegated to
-callbacks so it is unit-testable without devices and reusable by both the
-train driver and the tests.
+The controller is policy + protocol — mesh/step rebuilding is delegated to
+callbacks so it is unit-testable without devices and reusable by the train
+driver, the fault-injection tests, and the recovery benchmark.
+
+Example — a full heal driven by a fake clock (no devices needed)::
+
+    >>> from repro.runtime.membership import Membership
+    >>> clk = lambda: clk.t
+    >>> clk.t = 0.0
+    >>> m = Membership(expected=8, heartbeat_timeout=5.0, clock=clk)
+    >>> for r in range(8):
+    ...     m.join(r)
+    >>> clk.t = 3.0
+    >>> for r in range(7):         # rank 7 dies silently
+    ...     m.heartbeat(r)
+    >>> clk.t = 7.0
+    >>> calls = []
+    >>> ctl = ElasticController(
+    ...     membership=m,
+    ...     rebuild=lambda dp: calls.append(("rebuild", dp)),
+    ...     restore=lambda: calls.append(("restore",)) or 42,
+    ...     quiesce=lambda: calls.append(("quiesce",)) or 3,
+    ...     strategy="ring",       # keep all 7 survivors (non-pow2)
+    ... )
+    >>> ctl.step_or_heal(lambda: None)
+    True
+    >>> calls                      # quiesce BEFORE rebuild BEFORE restore
+    [('quiesce',), ('rebuild', 7), ('restore',)]
+    >>> h = ctl.history[0]
+    >>> (h["dp"], h["step"], h["generation"], h["cancelled"])
+    (7, 42, 1, 3)
+    >>> m.epoch, sorted(m.group())
+    (1, [0, 1, 2, 3, 4, 5, 6])
 """
 
 from __future__ import annotations
@@ -21,40 +71,115 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
+from ..core.algorithms import GroupBuild, build_group
+from ..core.transport import RankFailure
 from .membership import GroupError, Membership
 
 
 def pow2_floor(n: int) -> int:
+    """Largest power of two <= ``n`` (0 for non-positive ``n``).
+
+    >>> pow2_floor(7), pow2_floor(8), pow2_floor(0)
+    (4, 8, 0)
+    """
     return 1 << (n.bit_length() - 1) if n > 0 else 0
 
 
 @dataclass
 class ElasticController:
-    membership: Membership
-    rebuild: Callable[[int], None]  # new_dp_degree -> rebuild mesh/step fns
-    restore: Callable[[], int]  # reload ckpt onto new mesh; returns step
-    min_degree: int = 1
-    history: list = field(default_factory=list)
+    """Drives the detect → quiesce → regroup → reshard → resume loop.
 
-    def heal(self) -> int:
-        """Handle a failure: shrink to survivors, restore, return resume step."""
+    Callbacks:
+
+    * ``rebuild(new_size)`` — reconstruct mesh/communicators/step functions
+      for the new data-parallel degree (``GroupBuild`` details — old-rank →
+      new-rank map, spares — are on ``self.last_build``).
+    * ``restore() -> step`` — reload the latest committed checkpoint onto
+      the new topology; returns the step to resume from.
+    * ``quiesce() -> n_cancelled`` (optional) — cancel in-flight
+      communication (typically ``scheduler.abort(generation)``); runs
+      *before* rebuild so no stale request is ever waited on the new group.
+
+    ``strategy`` picks the regroup layout (see
+    :func:`~repro.core.algorithms.build_group`): ``'pow2_floor'`` (default,
+    fast paths + idle spares), ``'ring'`` / ``'recursive_doubling'`` (all
+    survivors active, non-pow2 sizes), or ``'auto'``."""
+
+    membership: Membership
+    rebuild: Callable[[int], None]  # new degree -> rebuild mesh/step fns
+    restore: Callable[[], int]  # reload ckpt onto new topology; returns step
+    min_degree: int = 1
+    strategy: str = "pow2_floor"
+    quiesce: Callable[[], int] | None = None
+    generation: int = 0
+    history: list = field(default_factory=list)
+    last_build: GroupBuild | None = None
+
+    def plan_regroup(self) -> GroupBuild:
+        """The group the next heal would build (no side effects).  Raises
+        :class:`GroupError` below ``min_degree``."""
         survivors = self.membership.survivors()
-        new_dp = pow2_floor(len(survivors))
-        if new_dp < self.min_degree:
+        if not survivors:
+            raise GroupError("no survivors; nothing to regroup")
+        build = build_group(survivors, self.strategy)
+        if build.size < self.min_degree:
             raise GroupError(
-                f"only {len(survivors)} survivors; below min degree {self.min_degree}"
+                f"only {len(survivors)} survivors ({build.size} active under "
+                f"{build.strategy!r}); below min degree {self.min_degree}"
             )
-        self.rebuild(new_dp)
+        return build
+
+    def _commit(self, build: GroupBuild, survivors: int) -> int:
+        cancelled = self.quiesce() if self.quiesce is not None else 0
+        self.generation += 1
+        self.membership.reform(build.active)
+        self.rebuild(build.size)
         step = self.restore()
-        self.history.append({"survivors": len(survivors), "dp": new_dp, "step": step})
+        self.last_build = build
+        self.history.append({
+            "survivors": survivors,
+            "dp": build.size,
+            "step": step,
+            "generation": self.generation,
+            "cancelled": cancelled,
+            "spares": build.spares,
+            "strategy": build.strategy,
+        })
         return step
 
+    def heal(self) -> int:
+        """Handle a failure end-to-end: quiesce, regroup the survivors,
+        reshard from the checkpoint.  Returns the step to resume from."""
+        build = self.plan_regroup()
+        return self._commit(build, len(self.membership.survivors()))
+
+    def rescale_up(self) -> int | None:
+        """Opportunistic grow-back: if rejoined spares (membership flap) or
+        idle pow2-floor spares allow a *larger* group than the current one,
+        run the same quiesce → regroup → reshard protocol upward.  Returns
+        the resume step, or None when no growth is available."""
+        survivors = self.membership.survivors()
+        if not survivors:
+            return None
+        build = build_group(survivors, self.strategy)
+        if build.size <= len(self.membership.group()):
+            return None
+        return self._commit(build, len(survivors))
+
     def step_or_heal(self, do_step: Callable[[], None]) -> bool:
-        """Run one step; on GroupError heal and report True (healed)."""
+        """Run one step under failure protection; heal and report True when
+        a failure was detected (heartbeat timeout before the step, or a
+        :class:`~repro.core.transport.RankFailure` escaping mid-step —
+        transport evidence is committed to the membership first, so the
+        regroup sees the failed rank as dead regardless of timers)."""
         try:
             self.membership.check_alive()
             do_step()
             return False
+        except RankFailure as e:
+            self.membership.mark_failed(e.rank)
+            self.heal()
+            return True
         except GroupError:
             self.heal()
             return True

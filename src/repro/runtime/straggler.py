@@ -1,9 +1,20 @@
 """Straggler detection and mitigation.
 
-Detection: per-rank EMA of step wall-time; a rank is a straggler when its
-EMA exceeds ``threshold`` x the current median.
+Detection runs on two signals:
 
-Mitigations (both exposed to the trainer):
+* **step wall-time** (:meth:`StragglerPolicy.observe`) — per-rank EMA; a
+  rank is a straggler when its EMA exceeds ``threshold`` × the current
+  median.
+* **communication wait-time** (:meth:`StragglerPolicy.observe_wait`) — the
+  per-request blocked-wait trace the
+  :class:`~repro.core.scheduler.CommScheduler` records at ``drain``.  A
+  slow rank stretches every collective it participates in, so waits grow
+  even when the local step time looks healthy.
+  :meth:`StragglerPolicy.comm_slowdown` condenses the trace into the
+  factor the scheduler re-plans its buckets with
+  (:meth:`~repro.core.scheduler.CommScheduler.replan`).
+
+Mitigations (all exposed to the trainer):
 
 * ``backup``   — speculative re-execution: the straggler's microbatch is
   duplicated on its buddy rank (rank ^ 1); first result wins.  We model
@@ -15,6 +26,19 @@ Mitigations (both exposed to the trainer):
   contributions are dropped for that step.  ``subgroup_scale`` computes the
   mask/rescale, and ``repro.core.collectives.allreduce_tree`` applies it by
   zeroing the straggler's local contribution before the reduce.
+* ``replan``   — bucket re-planning: feed ``comm_slowdown()`` to the
+  scheduler so the α-β bucket optimum reflects the stretched wire time.
+
+Example — wait-trace detection feeding a slowdown estimate::
+
+    >>> sp = StragglerPolicy(n_ranks=4, threshold=2.0, min_samples=1)
+    >>> for _ in range(3):
+    ...     for r in range(4):
+    ...         sp.observe_wait(r, 0.001 if r != 3 else 0.004)
+    >>> sp.wait_stragglers()
+    [3]
+    >>> round(sp.comm_slowdown(), 2)
+    4.0
 """
 
 from __future__ import annotations
@@ -26,6 +50,12 @@ import numpy as np
 
 @dataclass
 class StragglerPolicy:
+    """Per-rank slowness tracker + mitigation planner for one group.
+
+    ``threshold`` is the EMA-over-median ratio that flags a rank;
+    ``min_samples`` observations per rank are required before anything is
+    flagged (cold EMAs are noise)."""
+
     n_ranks: int
     threshold: float = 2.0
     ema: float = 0.7
@@ -33,19 +63,52 @@ class StragglerPolicy:
 
     _t: dict[int, float] = field(default_factory=dict)
     _n: int = 0
+    _w: dict[int, float] = field(default_factory=dict)  # comm-wait EMAs
+    _wn: int = 0
 
     def observe(self, rank: int, step_time: float):
+        """Record one step wall-time sample for ``rank`` (EMA-smoothed)."""
         prev = self._t.get(rank)
         self._t[rank] = (
             step_time if prev is None else self.ema * prev + (1 - self.ema) * step_time
         )
         self._n += 1
 
+    def observe_wait(self, rank: int, wait_s: float):
+        """Record one communication blocked-wait sample for ``rank`` — e.g.
+        a row of :attr:`CommScheduler.wait_trace <repro.core.scheduler.CommScheduler.wait_trace>`
+        attributed to the rank that was slow to contribute."""
+        prev = self._w.get(rank)
+        self._w[rank] = (
+            wait_s if prev is None else self.ema * prev + (1 - self.ema) * wait_s
+        )
+        self._wn += 1
+
     def stragglers(self) -> list[int]:
+        """Ranks whose step-time EMA exceeds ``threshold`` × median."""
         if self._n < self.min_samples * self.n_ranks:
             return []
         med = float(np.median(list(self._t.values())))
         return [r for r, t in self._t.items() if t > self.threshold * med]
+
+    def wait_stragglers(self) -> list[int]:
+        """Ranks whose comm-wait EMA exceeds ``threshold`` × median."""
+        if self._wn < self.min_samples * self.n_ranks:
+            return []
+        med = float(np.median(list(self._w.values())))
+        return [r for r, t in self._w.items() if t > self.threshold * med]
+
+    def comm_slowdown(self) -> float:
+        """Observed communication-slowdown factor (>= 1): worst comm-wait
+        EMA over the median.  This is what
+        :meth:`CommScheduler.replan <repro.core.scheduler.CommScheduler.replan>`
+        consumes — 1.0 until enough samples exist."""
+        if self._wn < self.min_samples * self.n_ranks or len(self._w) < 2:
+            return 1.0
+        med = float(np.median(list(self._w.values())))
+        if med <= 0:
+            return 1.0
+        return max(1.0, max(self._w.values()) / med)
 
     def buddy(self, rank: int) -> int:
         """Backup worker for ``rank`` (its hypercube neighbour)."""

@@ -1,0 +1,34 @@
+"""Docs can't rot: tier-1 mirrors the CI docs job.
+
+``tools/check_docs.py`` is the single source of truth — the CI ``docs``
+job runs it as a script; these tests import the same functions so a broken
+doc link or a failing docstring example also fails the local suite."""
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_docs_index_exists_and_cross_links():
+    docs = {os.path.basename(p) for p in check_docs.doc_files()}
+    assert "README.md" in docs  # docs/README.md index
+    assert {"architecture.md", "channel-selection.md", "nonblocking.md",
+            "elasticity.md"} <= docs
+    index = open(os.path.join(ROOT, "docs", "README.md")).read()
+    for name in ("architecture.md", "channel-selection.md",
+                 "nonblocking.md", "elasticity.md"):
+        assert name in index, f"docs/README.md does not index {name}"
+    # the top-level README links the index
+    assert "docs/README.md" in open(os.path.join(ROOT, "README.md")).read()
+
+
+def test_markdown_links_resolve():
+    assert check_docs.check_links() == []
+
+
+def test_module_doctests_pass():
+    assert check_docs.run_doctests() == []

@@ -1,0 +1,494 @@
+"""Elastic fault-tolerant runtime: fault injection on the sim channel.
+
+Covers the PR-4 acceptance surface:
+
+* transport-level fault injection (``SimTransport.kill``) raises
+  :class:`RankFailure` mid-collective; cancellation closes trace slots and
+  discards staged broker keys (nothing leaks, nothing deadlocks);
+* **kill-rank mid-bucketed-allreduce**: the controller's quiesce → regroup
+  → reshard converges **bit-exactly** with a clean restart from the same
+  checkpoint at the new world size;
+* **membership flap** (down, then re-up): the heal keeps all survivors at
+  a non-pow2 size (recursive-doubling-with-spares), and the returned rank
+  is folded back in by ``rescale_up``;
+* ``selector.rescale_plan``: continue-degraded vs. regroup priced with the
+  α-β models + the restart-cost term, horizon-sensitive;
+* scheduler wait-time traces feed straggler detection and bucket
+  re-planning (``CommScheduler.replan``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import load_checkpoint, read_manifest, save_checkpoint
+from repro.core import channels
+from repro.core.algorithms import build_group
+from repro.core.communicator import Communicator
+from repro.core.models import ChannelSpec
+from repro.core.requests import CancelledError, Request, RequestQueue, irecv, isend
+from repro.core.scheduler import CommScheduler
+from repro.core.selector import (
+    bucket_plan,
+    explain_rescale_plan,
+    rescale_plan,
+    restart_cost_s,
+)
+from repro.core.transport import HostTransport, RankFailure, SimTransport
+from repro.runtime import ElasticController, GroupError, Membership, StragglerPolicy
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture
+def shared_channel():
+    """Register a sim-spec channel whose transport is a *shared* injectable
+    instance (``box['t']``) — the registry path the fault-injection tests
+    drive kills through."""
+    box = {"t": None}
+    name = "simfault_test_channel"
+    channels.register_channel(
+        ChannelSpec(name, alpha=5e-6, beta=1 / 16e9, kind="direct", push=True),
+        transport_factory=lambda **kw: box["t"],
+        overwrite=True,
+    )
+    try:
+        yield name, box
+    finally:
+        channels.unregister(name)
+
+
+# ---------------------------------------------------------------------------
+# Transport-level fault injection + cancellation
+# ---------------------------------------------------------------------------
+
+
+def test_kill_raises_rank_failure_with_rank():
+    t = SimTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    x = np.ones((4, 4), np.float32)
+    t.kill(2)
+    with pytest.raises(RankFailure) as e:
+        t.ppermute(x, perm)
+    assert e.value.rank == 2
+    t.revive(2)
+    t.ppermute(x, perm)  # healthy again
+
+
+def test_kill_after_rounds_lands_mid_collective():
+    t = SimTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    x = np.ones((4, 4), np.float32)
+    t.kill(1, after_rounds=2)
+    t.ppermute(x, perm)
+    t.ppermute(x, perm)
+    with pytest.raises(RankFailure):
+        t.ppermute(x, perm)  # third round hits the scheduled failure
+
+
+def test_transport_cancel_closes_pending_slot():
+    t = SimTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    req = t.ppermute_start(np.ones((4, 4), np.float32), perm)
+    assert t.trace.pending == 1
+    assert req.cancel() and req.cancelled
+    assert t.trace.pending == 0
+    assert not req.cancel()  # second cancel is a no-op
+
+
+def test_host_cancel_discards_staged_broker_keys():
+    t = HostTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    req = t.ppermute_start(np.ones((4, 8), np.float32), perm)
+    assert t.broker.stats.live_keys == 4
+    assert req.cancel()
+    assert t.broker.stats.live_keys == 0  # nothing leaks
+    assert t.broker.stats.aborts == 4
+    assert t.broker.stats.gets == 0  # the GET hop never happened
+    assert t.trace.pending == 0
+
+
+def test_cancelled_request_raises_on_wait():
+    t = SimTransport(2)
+    perm = [(0, 1), (1, 0)]
+    isend(np.ones((2, 2), np.float32), t, perm, tag=1)
+    req = irecv(t, tag=1)
+    assert req.cancel()
+    with pytest.raises(CancelledError):
+        req.wait()
+
+
+def test_cancel_of_completed_request_is_noop():
+    req = Request("op", result=5)
+    assert not req.cancel()
+    assert req.wait() == 5
+
+
+def test_cancel_all_respects_generations():
+    q = RequestQueue()
+    done = Request("op", thunk=lambda: 1, generation=0)
+    done.wait()
+    q.push(done)
+    q.push(Request("op", thunk=lambda: 2, generation=0))
+    q.push(Request("op", thunk=lambda: 3, generation=1))
+    assert q.cancel_all(generation=0) == 1  # the completed one doesn't count
+    assert len(q) == 1 and q.waitall() == [3]
+
+
+def test_scheduler_abort_discards_open_buckets_and_cancels():
+    comm = Communicator(axes=("data",), sizes=(4,), channel="sim")
+    sched = CommScheduler(comm, algorithm="recursive_doubling", bucket_bytes=64)
+    g = np.ones((4, 8), np.float32)  # 32B logical -> stays in the open bucket
+    sched.submit("a", g)
+    sched.submit("b", g)  # 64B -> first bucket issued (in the queue)
+    sched.submit("c", g)  # open again
+    assert len(sched.queue) == 1
+    assert sched.abort() == 1
+    assert len(sched.queue) == 0
+    assert sched.drain() == {}  # nothing left: clean slate for the regroup
+
+
+# ---------------------------------------------------------------------------
+# The elastic mini-trainer (pure numpy/sim; no devices)
+# ---------------------------------------------------------------------------
+
+LAYERS = (("w0", (4, 3)), ("w1", (7,)), ("w2", (2, 5)))
+LR = np.float32(0.05)
+
+
+def _stack(logical, P):
+    return {k: np.broadcast_to(v, (P,) + v.shape).copy() for k, v in logical.items()}
+
+
+def _init_params(P):
+    rng = np.random.default_rng(0)
+    return _stack({k: rng.normal(size=s).astype(np.float32) for k, s in LAYERS}, P)
+
+
+def _grads_at(step, P):
+    return {
+        k: np.random.default_rng(1 + 13 * step + i)
+        .normal(size=(P,) + shape).astype(np.float32)
+        for i, (k, shape) in enumerate(LAYERS)
+    }
+
+
+def _sgd_steps(sched, params, steps):
+    """Bucketed-overlap data-parallel SGD: per-layer grads submitted in
+    backward order, drained, applied.  Params stay replicated across the
+    stacked rank axis (the drain result is identical on every rank)."""
+    for step in steps:
+        g = _grads_at(step, sched.comm.size)
+        for i in reversed(range(len(LAYERS))):
+            sched.submit(LAYERS[i][0], g[LAYERS[i][0]])
+        red = sched.drain()
+        params = {k: params[k] - LR * red[k] for k in params}
+    return params
+
+
+def _save_logical(ckpt_dir, params, step, generation, world):
+    save_checkpoint(ckpt_dir, {k: v[0] for k, v in params.items()}, step=step,
+                    extra={"generation": generation, "world": world})
+
+
+def _load_logical(ckpt_dir):
+    target = {k: np.zeros(s, np.float32) for k, s in LAYERS}
+    tree, step = load_checkpoint(ckpt_dir, target)
+    return {k: np.asarray(v) for k, v in tree.items()}, step
+
+
+def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
+        tmp_path, shared_channel):
+    """The acceptance test: rank 5 dies mid-flight inside step 5's bucketed
+    allreduce; quiesce cancels the in-flight bucket, the controller regroups
+    8 -> 4 (pow2 floor), reshards from the step-3 checkpoint, and the
+    resumed trajectory is BIT-EXACT with a clean restart at world 4 from
+    the very same checkpoint."""
+    name, box = shared_channel
+    P, ckpt = 8, str(tmp_path / "ck")
+    box["t"] = SimTransport(P)
+    state = {
+        "comm": Communicator(axes=("data",), sizes=(P,), channel=name),
+    }
+    state["sched"] = CommScheduler(state["comm"], mean=True,
+                                   algorithm="recursive_doubling",
+                                   bucket_bytes=64)
+
+    clk = FakeClock()
+    m = Membership(expected=P, heartbeat_timeout=5.0, clock=clk)
+    for r in range(P):
+        m.join(r)
+
+    def rebuild(dp):
+        box["t"] = SimTransport(dp)
+        state["comm"] = state["comm"].regroup(sizes=(dp,))
+        state["sched"] = CommScheduler(state["comm"], mean=True,
+                                       algorithm="recursive_doubling",
+                                       bucket_bytes=64)
+
+    def restore():
+        logical, step = _load_logical(ckpt)
+        state["params"] = _stack(logical, state["comm"].size)
+        return step
+
+    def quiesce():
+        return state["sched"].abort(state["comm"].generation)
+
+    ctl = ElasticController(membership=m, rebuild=rebuild, restore=restore,
+                            quiesce=quiesce, strategy="pow2_floor",
+                            min_degree=2)
+
+    state["params"] = _init_params(P)
+    state["params"] = _sgd_steps(state["sched"], state["params"], range(0, 3))
+    _save_logical(ckpt, state["params"], 3, ctl.generation, P)
+    state["params"] = _sgd_steps(state["sched"], state["params"], range(3, 5))
+
+    # rank 5 fails 4 rounds into step 5's sync: the first bucket (3
+    # recursive-doubling rounds at P=8) completes and sits undrained in the
+    # queue; the failure lands mid-flight in the SECOND bucket
+    box["t"].kill(5, after_rounds=4)
+    healed = ctl.step_or_heal(
+        lambda: state.update(
+            params=_sgd_steps(state["sched"], state["params"], [5]))
+    )
+    assert healed
+    h = ctl.history[0]
+    assert h["dp"] == 4 and h["survivors"] == 7
+    assert h["cancelled"] == 1  # the completed-but-undrained bucket aborted
+    assert h["step"] == 3 and h["generation"] == 1
+    assert m.epoch == 1 and len(m.group()) == 4
+    assert state["comm"].generation == 1 and state["comm"].size == 4
+
+    # resume the healed run: redo steps 3.. at the new world
+    faulted = _sgd_steps(state["sched"], state["params"], range(3, 8))
+
+    # clean restart: fresh world-4 stack from the SAME checkpoint
+    box["t"] = SimTransport(4)
+    comm2 = Communicator(axes=("data",), sizes=(4,), channel=name)
+    sched2 = CommScheduler(comm2, mean=True, algorithm="recursive_doubling",
+                           bucket_bytes=64)
+    logical, step = _load_logical(ckpt)
+    assert step == 3
+    clean = _sgd_steps(sched2, _stack(logical, 4), range(3, 8))
+
+    for k in faulted:
+        assert np.array_equal(faulted[k], clean[k]), k
+
+    # and the checkpoint manifest recorded the pre-failure generation
+    man = read_manifest(ckpt)
+    assert man["extra"] == {"generation": 0, "world": 8}
+
+
+def test_membership_flap_down_then_up_exercises_non_pow2_spares(
+        tmp_path, shared_channel):
+    """Rank 6 goes silent (heartbeat loss, not transport failure): the heal
+    keeps all 7 survivors active via recursive-doubling-with-spares (a
+    non-pow2 group).  When rank 6 reports back, ``rescale_up`` folds it in
+    and the group returns to 8."""
+    name, box = shared_channel
+    P, ckpt = 8, str(tmp_path / "ck")
+    box["t"] = SimTransport(P)
+    state = {"comm": Communicator(axes=("data",), sizes=(P,), channel=name)}
+    state["sched"] = CommScheduler(state["comm"], mean=True,
+                                   algorithm="recursive_doubling",
+                                   bucket_bytes=10**9)
+
+    clk = FakeClock()
+    m = Membership(expected=P, heartbeat_timeout=5.0, clock=clk)
+    for r in range(P):
+        m.join(r)
+
+    def rebuild(dp):
+        box["t"] = SimTransport(dp)
+        state["comm"] = state["comm"].regroup(sizes=(dp,))
+        state["sched"] = CommScheduler(state["comm"], mean=True,
+                                       algorithm="recursive_doubling",
+                                       bucket_bytes=10**9)
+
+    def restore():
+        logical, step = _load_logical(ckpt)
+        state["params"] = _stack(logical, state["comm"].size)
+        return step
+
+    ctl = ElasticController(membership=m, rebuild=rebuild, restore=restore,
+                            quiesce=lambda: state["sched"].abort(),
+                            strategy="recursive_doubling")
+
+    state["params"] = _init_params(P)
+    state["params"] = _sgd_steps(state["sched"], state["params"], range(0, 2))
+    _save_logical(ckpt, state["params"], 2, ctl.generation, P)
+
+    # rank 6 goes silent: everyone else beats, the timeout passes
+    clk.t = 3.0
+    for r in range(P):
+        if r != 6:
+            m.heartbeat(r)
+    clk.t = 7.0  # rank 6's last beat (t=0) is now stale; the rest are fresh
+    healed = ctl.step_or_heal(
+        lambda: state.update(
+            params=_sgd_steps(state["sched"], state["params"], [2]))
+    )
+    assert healed
+    assert ctl.history[0]["dp"] == 7  # non-pow2: ALL survivors active
+    assert ctl.history[0]["spares"] == ()
+    assert state["comm"].size == 7
+
+    # the non-pow2 fold path actually reduces correctly at world 7
+    state["params"] = _sgd_steps(state["sched"], state["params"], [2])
+    g = _grads_at(2, 7)
+    expect = {
+        k: _stack(_load_logical(ckpt)[0], 7)[k] - LR * g[k].mean(axis=0)
+        for k in g
+    }
+    for k in expect:
+        assert np.allclose(state["params"][k], expect[k], atol=1e-6), k
+
+    # flap: rank 6 comes back and is folded in by the next rescale-up
+    clk.t = 10.0
+    for r in range(P):
+        if r != 6:
+            m.heartbeat(r)
+    m.rejoin(6)
+    assert ctl.rescale_up() == 2  # resharded from the step-2 checkpoint
+    assert ctl.history[1]["dp"] == 8
+    assert m.epoch == 2 and len(m.group()) == 8
+    assert state["comm"].size == 8 and state["comm"].generation == 2
+    assert ctl.rescale_up() is None  # no further growth available
+
+
+# ---------------------------------------------------------------------------
+# Group builds
+# ---------------------------------------------------------------------------
+
+
+def test_build_group_strategies():
+    surv = [0, 1, 2, 4, 5, 6, 7]
+    b = build_group(surv, "pow2_floor")
+    assert (b.size, b.spares) == (4, (5, 6, 7))
+    assert [b.rank_map[r] for r in b.active] == [0, 1, 2, 3]
+    assert build_group(surv, "ring").size == 7
+    assert build_group(surv, "recursive_doubling").spares == ()
+    assert build_group(surv, "auto").strategy == "ring"  # non-pow2
+    assert build_group(range(8), "auto").strategy == "recursive_doubling"
+    with pytest.raises(ValueError):
+        build_group([], "ring")
+    with pytest.raises(ValueError):
+        build_group(surv, "nope")
+
+
+# ---------------------------------------------------------------------------
+# rescale_plan: continue degraded vs. regroup now
+# ---------------------------------------------------------------------------
+
+
+def test_rescale_plan_horizon_flips_the_decision():
+    kw = dict(compute_s=0.5, channels=("ici",), ckpt_bytes=2e9,
+              steps_since_ckpt=25)
+    long = rescale_plan(50e6, 16, 15, steps_remaining=1000, **kw)
+    short = rescale_plan(50e6, 16, 15, steps_remaining=1, **kw)
+    assert long.best.action.startswith("regroup")  # amortize the restart
+    assert short.best.action == "continue-degraded"  # restart never pays off
+    # the degraded option pays doubled compute + stretched wire every step
+    cont = [o for o in long.options if o.action == "continue-degraded"][0]
+    assert cont.step_time_s > 2 * 0.5
+    assert cont.restart_s == 0.0
+
+
+def test_rescale_plan_options_and_restart_cost_terms():
+    plan = rescale_plan(50e6, 16, 9, steps_remaining=100, compute_s=0.05,
+                        channels=("sim",), ckpt_bytes=2e9, steps_since_ckpt=40)
+    actions = [o.action for o in plan.options]
+    assert actions == ["continue-degraded", "regroup-pow2", "regroup-full"]
+    pow2 = plan.options[1]
+    full = plan.options[2]
+    assert (pow2.world, full.world) == (8, 9)
+    # restart cost: monotone in lost steps, includes the reshard read
+    lo = restart_cost_s(2e9, 8, steps_since_ckpt=0, healthy_step_s=0.1)
+    hi = restart_cost_s(2e9, 8, steps_since_ckpt=30, healthy_step_s=0.1)
+    assert hi == pytest.approx(lo + 3.0)
+    assert restart_cost_s(2e9, 8) > restart_cost_s(0, 8)
+    # pow2 survivors: no separate regroup-full row
+    plan8 = rescale_plan(50e6, 16, 8, steps_remaining=10, compute_s=0.05,
+                         channels=("sim",))
+    assert [o.action for o in plan8.options] == [
+        "continue-degraded", "regroup-pow2"]
+
+
+def test_explain_rescale_plan_prints_marked_table():
+    table = explain_rescale_plan(50e6, 16, 15, 1000, 0.5, channels=("ici",),
+                                 ckpt_bytes=2e9, steps_since_ckpt=25)
+    assert "rescale plan" in table and "continue-degraded" in table
+    assert "*" in table and "->" in table
+
+
+# ---------------------------------------------------------------------------
+# Wait-time traces -> straggler detection -> bucket re-planning
+# ---------------------------------------------------------------------------
+
+
+def test_drain_records_wait_trace():
+    comm = Communicator(axes=("data",), sizes=(4,), channel="sim")
+    sched = CommScheduler(comm, algorithm="recursive_doubling", bucket_bytes=64)
+    g = np.ones((4, 8), np.float32)
+    for nm in ("a", "b", "c", "d"):
+        sched.submit(nm, g)
+    sched.drain()
+    assert len(sched.wait_trace) == 2  # two 64B buckets were drained
+    for op, nbytes, wait_s in sched.wait_trace:
+        assert op == "allreduce" and nbytes > 0 and wait_s >= 0.0
+
+
+def test_replan_under_slowdown_weakly_fuses():
+    comm = Communicator(axes=("data",), sizes=(8,), channel="sim")
+    sched = CommScheduler(comm, total_bytes_hint=64 << 20, compute_s=2e-3)
+    base = sched.bucket_bytes
+    assert sched.plan is not None and sched.plan.n_buckets > 1
+    plan = sched.replan(slowdown=16.0)
+    assert plan is sched.plan and plan.slowdown == 16.0
+    # stretched wire time eats the overlap window: fuse (weakly) more
+    assert sched.bucket_bytes >= base
+    # pinned-bucket schedulers refuse to replan (no planner hint)
+    pinned = CommScheduler(comm, bucket_bytes=1 << 20)
+    assert pinned.replan(4.0) is None
+
+
+def test_straggler_wait_ema_drives_replan_factor():
+    sp = StragglerPolicy(n_ranks=4, threshold=2.0, min_samples=1)
+    assert sp.comm_slowdown() == 1.0  # cold: no evidence, no re-plan
+    for _ in range(3):
+        for r in range(4):
+            sp.observe_wait(r, 0.002 if r != 1 else 0.012)
+    assert sp.wait_stragglers() == [1]
+    s = sp.comm_slowdown()
+    assert s == pytest.approx(6.0, rel=0.01)
+    comm = Communicator(axes=("data",), sizes=(4,), channel="sim")
+    sched = CommScheduler(comm, total_bytes_hint=64 << 20, compute_s=2e-3)
+    assert sched.replan(s).slowdown == pytest.approx(6.0, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Trainer wiring (1-device smoke: elastic arms, stamps ckpt generations)
+# ---------------------------------------------------------------------------
+
+
+def test_trainer_elastic_stamps_checkpoint_generation(tmp_path):
+    from repro import configs
+    from repro.launch.mesh import make_host_mesh
+    from repro.training.train_step import TrainConfig
+    from repro.training.trainer import Trainer
+
+    tiny = configs.get_reduced("llama3_2_1b", n_layers=1, d_model=32, n_heads=2,
+                               n_kv_heads=2, d_ff=64, vocab_size=128, head_dim=16)
+    tr = Trainer(cfg=tiny, tcfg=TrainConfig(mode="xla"),
+                 mesh=make_host_mesh(1, 1), batch=2, seq=16,
+                 ckpt_dir=str(tmp_path), ckpt_every=2, elastic=True)
+    params, opt = tr.init_state()
+    params, opt, hist = tr.run(params, opt, steps=2)
+    assert len(hist) == 2 and tr.heals == []
+    man = read_manifest(str(tmp_path))
+    assert man["extra"] == {"generation": 0, "world": 1}

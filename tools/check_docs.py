@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Docs health check — what the CI ``docs`` job runs (and
+``tests/test_docs.py`` mirrors, so the check also gates tier-1 locally).
+
+Two checks keep ``README.md`` + ``docs/`` from rotting:
+
+1. **Markdown link check** — every relative link in README.md and
+   docs/*.md must resolve to a file/directory in the repo (http(s) links
+   are not fetched; fenced code blocks are ignored).
+2. **Doctests** — the example-bearing module docstrings the docs reference
+   (request layer, scheduler, runtime, group builds) are executed with
+   :mod:`doctest`.  ``python -m doctest`` cannot import package-relative
+   modules by path, so this runner imports each module properly and calls
+   ``doctest.testmod`` on it.
+
+Usage::
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import doctest
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Modules whose docstring examples the docs lean on.  Keep in sync with
+#: docs/elasticity.md and docs/nonblocking.md code references.
+DOCTEST_MODULES = (
+    "repro.core.requests",
+    "repro.core.scheduler",
+    "repro.core.algorithms",
+    "repro.runtime.membership",
+    "repro.runtime.straggler",
+    "repro.runtime.elastic",
+)
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def doc_files() -> list[str]:
+    return [os.path.join(ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(ROOT, "docs", "*.md"))
+    )
+
+
+def check_links() -> list[tuple[str, str]]:
+    """(file, target) for every relative markdown link that doesn't resolve."""
+    bad = []
+    for md in doc_files():
+        with open(md) as f:
+            text = _FENCE_RE.sub("", f.read())
+        base = os.path.dirname(md)
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+            if not os.path.exists(path):
+                bad.append((os.path.relpath(md, ROOT), target))
+    return bad
+
+
+def run_doctests(verbose: bool = False) -> list[str]:
+    """Modules whose doctests failed (empty = all green)."""
+    failed = []
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        result = doctest.testmod(mod, verbose=verbose)
+        print(f"doctest {name}: {result.attempted} examples, "
+              f"{result.failed} failures")
+        if result.failed:
+            failed.append(name)
+    return failed
+
+
+def main() -> int:
+    bad_links = check_links()
+    for md, target in bad_links:
+        print(f"BROKEN LINK {md}: {target}", file=sys.stderr)
+    print(f"link check: {len(doc_files())} files, {len(bad_links)} broken")
+    failed = run_doctests()
+    if bad_links or failed:
+        print(f"FAILED: {len(bad_links)} broken links, "
+              f"doctest failures in {failed}", file=sys.stderr)
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
