@@ -1,0 +1,91 @@
+"""Serving throughput and cost: tokens/s and $/1M tokens vs world and batch.
+
+For every (tensor-parallel world, batch-slots) cell this bench runs the
+real continuous-batching engine (``serving/engine.py``) on the instrumented
+sim channel — admit/prefill/decode/evict with the per-step collectives of
+``docs/serving.md`` — and reports:
+
+* measured wall-clock tokens/s of the lockstep simulation (sanity: the
+  engine really serves), plus the observed comm wait share,
+* the **modeled** decode-step latency and $/1M-tokens from
+  ``selector.serve_plan`` on the same channel constants — the pair of
+  numbers the model-driven story stands on (regime-aware channel +
+  algorithm choice, priced per token),
+* trace totals (serialized slots vs raw messages: how much of the decode
+  traffic overlapped admission prefills).
+
+An artifact JSON lands in ``benchmarks/artifacts/serving/serving.json``
+like the other benches' artifacts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.tp_lm import TPServeConfig
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "serving")
+WORLDS = (1, 2, 4)
+BATCHES = (2, 8)
+MAX_NEW = 8
+PROMPT = 8
+
+CFG = TPServeConfig(vocab_size=256, d_model=64, n_heads=4, head_dim=16,
+                    d_ff=128, n_layers=2, max_len=PROMPT + MAX_NEW,
+                    ff_chunks=4)
+
+
+def _serve_once(world: int, batch: int) -> dict:
+    rng = np.random.default_rng(0)
+    with ContinuousBatchingEngine(CFG, world=world, max_slots=batch,
+                                  kv_pages=batch * 4, page_size=4,
+                                  seed=0) as eng:
+        for _ in range(2 * batch):
+            eng.submit(rng.integers(0, CFG.vocab_size, PROMPT),
+                       max_new=MAX_NEW)
+        t0 = time.perf_counter()
+        out = eng.run()
+        dt = time.perf_counter() - t0
+        assert len(out) == 2 * batch
+        plan = eng.serve_plan(prompt_len=PROMPT)
+        trace = eng.transport.trace
+        wait_s = sum(w for _, _, w in eng.comm_log)
+        return dict(
+            world=world, batch=batch,
+            tokens=eng.tokens_emitted, steps=eng.steps, wall_s=dt,
+            tok_per_s=eng.tokens_emitted / dt,
+            comm_wait_s=wait_s,
+            model_decode_step_s=plan.decode.step_s,
+            model_decode_usd_per_mtok=plan.decode.usd_per_mtok,
+            model_prefill_step_s=plan.prefill.step_s,
+            model_prefill_usd_per_mtok=plan.prefill.usd_per_mtok,
+            trace_rounds=trace.rounds,
+            trace_serial_rounds=trace.serial_rounds,
+            peak_pages=eng.kv.peak_in_use,
+        )
+
+
+def run():
+    rows, cells = [], []
+    for world in WORLDS:
+        for batch in BATCHES:
+            c = _serve_once(world, batch)
+            cells.append(c)
+            rows.append((
+                f"serving/P{world}/batch{batch}",
+                c["wall_s"] * 1e6 / max(1, c["tokens"]),
+                f"tok/s={c['tok_per_s']:.0f} "
+                f"model_decode={c['model_decode_step_s']*1e6:.1f}us "
+                f"model_$per_mtok={c['model_decode_usd_per_mtok']:.4f} "
+                f"slots={c['trace_serial_rounds']}/{c['trace_rounds']}",
+            ))
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "serving.json"), "w") as f:
+        json.dump({"config": CFG.__dict__, "prompt": PROMPT,
+                   "max_new": MAX_NEW, "cells": cells}, f, indent=1)
+    return rows

@@ -15,6 +15,8 @@ Mapping to the paper:
                     (docs/nonblocking.md; the PR-3 scheduler claim)
     elastic      -> time-to-recover vs world size and bucket depth
                     (docs/elasticity.md; kill-rank -> quiesce/regroup/reshard)
+    serving      -> continuous-batching tokens/s + modeled $/1M tokens vs
+                    world and batch (docs/serving.md)
     kernels      -> Pallas kernel throughput vs naive references
     roofline     -> §Roofline reader over the dry-run artifacts
 """
@@ -34,6 +36,7 @@ BENCHES = [
     "kmeans",
     "overlap",
     "elastic",
+    "serving",
     "kernels",
     "roofline",
 ]

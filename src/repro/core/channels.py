@@ -83,6 +83,11 @@ class Channel:
     # price(op, nbytes, P, algo, mem_gib, time_s) -> ExchangeCost; None uses
     # pricing.collective_cost with this channel's spec.
     price_fn: Callable | None = None
+    # private channels are resolvable by name but excluded from
+    # default_channels() — for owner-scoped registrations (e.g. a serving
+    # engine's instrumented transport) that must not leak into unrelated
+    # algorithm='auto' selections.
+    private: bool = False
 
     @property
     def name(self) -> str:
@@ -140,9 +145,11 @@ def register(channel: Channel, overwrite: bool = False) -> Channel:
 def register_channel(spec: ChannelSpec,
                      transport_factory: Callable[..., Transport] | None = None,
                      price_fn: Callable | None = None,
-                     overwrite: bool = False) -> Channel:
+                     overwrite: bool = False,
+                     private: bool = False) -> Channel:
     """Convenience wrapper: build the :class:`Channel` and register it."""
-    return register(Channel(spec, transport_factory, price_fn), overwrite=overwrite)
+    return register(Channel(spec, transport_factory, price_fn, private),
+                    overwrite=overwrite)
 
 
 def unregister(name: str) -> None:
@@ -175,11 +182,13 @@ def default_channels() -> tuple[str, ...]:
     """The channels the selector considers when the caller names none: every
     registered channel that can actually move bytes here (has a transport),
     minus provider channels — xla shares ici's wire, so enumerating it by
-    default would only duplicate every ici row."""
+    default would only duplicate every ici row — and minus ``private``
+    registrations (owner-scoped transports, e.g. a serving engine's)."""
     return tuple(
         n for n in sorted(_REGISTRY)
         if _REGISTRY[n].transport_factory is not None
         and _REGISTRY[n].spec.kind != "provider"
+        and not _REGISTRY[n].private
     )
 
 

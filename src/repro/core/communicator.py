@@ -77,6 +77,17 @@ class Communicator:
 
         return _explain(op, nbytes, self.size, channels=channels)
 
+    def serve_plan(self, d_model: int, n_layers: int, vocab_size: int,
+                   batch: int, prompt_len: int, **kwargs):
+        """Price one TP decode step and one prefill step of a server
+        sharded over this group on this channel — see
+        :func:`repro.core.selector.serve_plan` (the serving analogue of
+        :meth:`explain`)."""
+        from .selector import serve_plan as _serve_plan
+
+        return _serve_plan(d_model, n_layers, vocab_size, self.size, batch,
+                           prompt_len, channels=(self.channel,), **kwargs)
+
     def regroup(self, sizes: tuple[int, ...] | None = None,
                 axes: tuple[str, ...] | None = None) -> "Communicator":
         """The next-generation communicator after a membership change:

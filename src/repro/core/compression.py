@@ -17,6 +17,24 @@ expensive link is DCN (cross-pod), so we provide:
 
 Wire bytes per hop: ``c/4 + 4·c/block`` (f32 input) vs ``c`` uncompressed —
 the cost model exposes this to the selector for DCN-bound reductions.
+
+Doctest — quantize/dequantize round-trip bounds and the wire-byte model::
+
+    >>> import numpy as np
+    >>> x = np.linspace(-1.0, 1.0, 512, dtype=np.float32)[None]
+    >>> q, scale = quantize_blockwise(np, x, block=256)
+    >>> q.dtype.name, scale.shape
+    ('int8', (1, 2))
+    >>> y = dequantize_blockwise(np, q, scale, block=256)
+    >>> bool(np.max(np.abs(x - y)) <= np.max(np.abs(x)) / 127.0)
+    True
+    >>> compressed_hop_bytes(1024, block=256)   # int8 payload + f32 scales
+    1040.0
+    >>> int(1024 * 4 / compressed_hop_bytes(1024, 256))  # ~4x f32 reduction
+    3
+    >>> ring = compressed_ring_time(4e6, P=4, alpha=1e-5, beta=1/6.25e9)
+    >>> bool(0 < ring < 2 * (4 - 1) * (2e-5 + 1e6 * 4 / 6.25e9))
+    True
 """
 
 from __future__ import annotations

@@ -14,6 +14,22 @@ paper-internal inconsistencies (S3 row time implies 500 MB/s vs. Table 2's
 TPU extension: communication has no per-message fee, but it occupies chips —
 ``cost = chips · time · p_chip`` — which is exactly the paper's
 "communication time is money" argument transplanted to reserved hardware.
+The serving runtime surfaces the same occupancy price **per generated
+token** (:func:`usd_per_mtok`), which is how ``serve_plan`` turns a decode
+step time into the $/1M-tokens column of ``launch/serve.py --explain``.
+
+Doctest — the paper's Table 4 headline numbers reproduce to the cent::
+
+    >>> t4 = paper_table4()
+    >>> round(t4["s3"].total_usd, 2)
+    6.95
+    >>> round(t4["redis"].total_usd, 2)
+    0.84
+    >>> round(t4["direct"].total_usd, 2)
+    0.2
+    >>> cost = p2p_exchange_cost("direct", nbytes=1e6, n_exchanges=1)
+    >>> cost.time_s == CHANNELS["direct"].alpha + 1e6 * CHANNELS["direct"].beta
+    True
 """
 
 from __future__ import annotations
@@ -51,8 +67,31 @@ class ExchangeCost:
 
 
 def faas_cost(P: int, t: float, mem_gib: float, n: int = 1) -> float:
-    """Paper eq. (1): P participants × time × $/GiB-s × memory, n times."""
+    """Paper eq. (1): P participants × time × $/GiB-s × memory, n times.
+
+    >>> faas_cost(2, 1.0, 2.0) == 2 * 1.0 * P_FAAS * 2.0
+    True
+    """
     return P * t * P_FAAS * mem_gib * n
+
+
+def usd_per_mtok(P: int, step_s: float, tokens_per_step: float,
+                 p_chip_s: float = P_CHIP_S) -> float:
+    """Chip-occupancy dollars per **million generated tokens**: ``P`` chips
+    are reserved for ``step_s`` seconds to emit ``tokens_per_step`` tokens.
+    This is the serving-side reading of the paper's "communication time is
+    money": every microsecond the decode-step collectives add to ``step_s``
+    shows up linearly in the $/1M-tokens bill that
+    ``launch/serve.py --explain`` prints.
+
+    >>> round(usd_per_mtok(8, 0.01, 16), 4)   # 8 chips, 10ms step, 16 tok
+    1.6667
+    >>> usd_per_mtok(8, 0.02, 16) == 2 * usd_per_mtok(8, 0.01, 16)
+    True
+    """
+    if tokens_per_step <= 0:
+        raise ValueError("tokens_per_step must be positive")
+    return P * step_s * p_chip_s / tokens_per_step * 1e6
 
 
 def p2p_exchange_cost(

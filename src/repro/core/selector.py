@@ -317,6 +317,190 @@ def explain_bucket_plan(
 
 
 # ---------------------------------------------------------------------------
+# Serve planning — price the two inference regimes per step (the serving
+# runtime's cost question; see serving/engine.py and docs/serving.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ServePhase:
+    """One priced inference regime (``'prefill'`` or ``'decode'``).
+
+    ``allreduce`` is the candidate chosen for the per-layer TP-partial
+    sync (2 per layer), ``allgather`` the one for the token-emission
+    exchange; ``step_s = compute_s + comm_s`` is the modeled step latency
+    and ``usd_per_mtok`` its chip-occupancy price per million tokens
+    (:func:`repro.core.pricing.usd_per_mtok`)."""
+
+    phase: str
+    tokens_per_step: float
+    nbytes_allreduce: float
+    nbytes_allgather: float
+    allreduce: Candidate | None
+    allgather: Candidate | None
+    comm_s: float
+    compute_s: float
+    step_s: float
+    usd_per_step: float
+    usd_per_mtok: float
+
+
+@dataclass(frozen=True)
+class ServePlan:
+    """The serving cost model's answer for one engine shape: both regimes
+    priced with the same α-β(+γ) channel models the selector uses
+    everywhere else."""
+
+    P: int
+    batch: int
+    prompt_len: int
+    d_model: int
+    n_layers: int
+    vocab_size: int
+    prefill: ServePhase
+    decode: ServePhase
+
+
+def serve_plan(
+    d_model: int,
+    n_layers: int,
+    vocab_size: int,
+    P: int,
+    batch: int,
+    prompt_len: int,
+    channels: tuple[str, ...] | None = None,
+    objective: str = "time",
+    itemsize: int = 4,
+    flops_per_token: float | None = None,
+    peak_flops: float | None = None,
+    mem_gib: float = 2.0,
+    logits_mode: str = "gather",
+) -> ServePlan:
+    """Price one decode step and one prefill step of a TP-sharded server.
+
+    Per layer a TP decode step moves two row-parallel partial allreduces of
+    ``batch·d_model`` elements (attention output + MLP down projection) and
+    one token-emission allgather of the vocab-sharded logits
+    (``batch·vocab`` elements under ``logits_mode='gather'``, a ``batch·2``
+    max/argmax pair under ``'local-argmax'``).  Prefill moves the same
+    traffic scaled by ``prompt_len``.  The two regimes therefore sit at
+    opposite ends of the α-β trade — decode is **latency-bound** (small
+    messages: the selector leans to recursive doubling at depth 1), prefill
+    **bandwidth-bound** (the selector leans to ring/Rabenseifner and picks
+    a chunk-pipelining depth) — and FMI's model-driven selection applies to
+    inference exactly as it does to training:
+
+    >>> plan = serve_plan(d_model=4096, n_layers=32, vocab_size=128256,
+    ...                   P=8, batch=4, prompt_len=2048, channels=("ici",))
+    >>> plan.decode.allreduce.algorithm    # 64 KB: latency-optimal
+    'recursive_doubling'
+    >>> plan.prefill.allreduce.algorithm   # 134 MB: bandwidth-optimal
+    'rabenseifner'
+    >>> plan.decode.allreduce.depth, plan.prefill.allreduce.depth > 1
+    (1, True)
+    >>> plan.decode.usd_per_mtok > plan.prefill.usd_per_mtok  # amortization
+    True
+
+    ``compute_s`` comes from ``flops_per_token`` (default: the dense
+    ``12·L·D² + 2·D·V`` estimate) over ``P`` chips at ``peak_flops``
+    (default v5e bf16); the dollar column is chip occupancy of the whole
+    step — compute *and* exposed communication — so shaving the collective
+    time shows up directly in $/1M tokens."""
+    from .models import V5E
+    from .pricing import usd_per_mtok
+
+    if peak_flops is None:
+        peak_flops = V5E.peak_flops_bf16
+    if flops_per_token is None:
+        flops_per_token = 2.0 * (12 * n_layers * d_model * d_model
+                                 + 2 * d_model * vocab_size)
+
+    def phase(name: str, tokens: int) -> ServePhase:
+        # per-step payloads: `tokens` activation rows in flight at once
+        ar_bytes = float(batch * tokens * d_model * itemsize)
+        if logits_mode == "local-argmax":
+            ag_bytes = float(P * batch * 2 * itemsize)
+        else:
+            ag_bytes = float(batch * vocab_size * itemsize)
+        if P > 1:
+            ar = select("allreduce", ar_bytes, P, channels=channels,
+                        objective=objective, mem_gib=mem_gib)
+            ag = select("allgather", ag_bytes, P, channels=channels,
+                        objective=objective, mem_gib=mem_gib)
+            comm_s = 2 * n_layers * ar.time_s + ag.time_s
+        else:
+            ar = ag = None
+            comm_s = 0.0
+        compute_s = flops_per_token * batch * tokens / (P * peak_flops)
+        step_s = compute_s + comm_s
+        tps = float(batch * tokens)
+        usd_step = P * step_s * P_CHIP_S
+        return ServePhase(name, tps, ar_bytes, ag_bytes, ar, ag, comm_s,
+                          compute_s, step_s, usd_step,
+                          usd_per_mtok(P, step_s, tps))
+
+    return ServePlan(P, batch, prompt_len, d_model, n_layers, vocab_size,
+                     prefill=phase("prefill", prompt_len),
+                     decode=phase("decode", 1))
+
+
+def explain_serve_plan(
+    d_model: int,
+    n_layers: int,
+    vocab_size: int,
+    P: int,
+    batch: int,
+    prompt_len: int,
+    channels: tuple[str, ...] | None = None,
+    **kwargs,
+) -> str:
+    """Both serving regimes as a table — what ``launch/serve.py --explain``
+    prints: per regime the chosen (channel, algorithm, depth) for the
+    TP-partial allreduce and the logits allgather, the predicted step
+    latency split compute/comm, and the $/1M-tokens price."""
+    def fmt_bytes(n: float) -> str:
+        if n < 1e3:
+            return f"{n:.0f}B"
+        if n < 1e6:
+            return f"{n/1e3:.1f}KB"
+        return f"{n/1e6:.2f}MB"
+
+    plan = serve_plan(d_model, n_layers, vocab_size, P, batch, prompt_len,
+                      channels=channels, **kwargs)
+    lines = [
+        f"serve plan: P={P}, batch={batch}, prompt {prompt_len}, "
+        f"d_model={d_model}, {n_layers} layers, vocab {vocab_size}",
+        f"{'phase':8s} {'op':10s} {'payload':>10s} {'channel':10s} "
+        f"{'algorithm':20s} {'depth':>5s} {'t/op':>10s} {'n/step':>6s}",
+        "-" * 86,
+    ]
+    for ph in (plan.prefill, plan.decode):
+        for op, cand, nbytes, n in (
+            ("allreduce", ph.allreduce, ph.nbytes_allreduce, 2 * n_layers),
+            ("allgather", ph.allgather, ph.nbytes_allgather, 1),
+        ):
+            if cand is None:
+                lines.append(f"{ph.phase:8s} {op:10s} {fmt_bytes(nbytes):>10s} "
+                             f"{'-':10s} {'(single rank)':20s} {'-':>5s} "
+                             f"{0.0:8.1f}us {n:6d}")
+                continue
+            lines.append(
+                f"{ph.phase:8s} {op:10s} {fmt_bytes(nbytes):>10s} "
+                f"{cand.channel:10s} {cand.algorithm:20s} {cand.depth:5d} "
+                f"{cand.time_s*1e6:8.1f}us {n:6d}"
+            )
+    lines.append("-" * 86)
+    for ph in (plan.prefill, plan.decode):
+        lines.append(
+            f"-> {ph.phase}: step {ph.step_s*1e3:.3f}ms "
+            f"(compute {ph.compute_s*1e3:.3f}ms + comm {ph.comm_s*1e3:.3f}ms), "
+            f"{ph.tokens_per_step:.0f} tok/step, "
+            f"${ph.usd_per_mtok:.4f}/1M tokens"
+        )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
 # Rescale planning — continue degraded vs. regroup now (the elastic runtime's
 # cost question; see runtime/elastic.py and docs/elasticity.md)
 # ---------------------------------------------------------------------------

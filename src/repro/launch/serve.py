@@ -1,7 +1,27 @@
-"""Serving launcher (reduced configs on the host; full configs via dryrun).
+"""Serving launcher: FMI continuous batching (default) or mesh wave batching.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --requests 16 --batch 4 --prompt-len 32 --max-new 32
+The continuous policy drives
+:class:`repro.serving.engine.ContinuousBatchingEngine` — the
+tensor-parallel runtime with a rank-sharded paged KV cache, per-step
+admit/evict, explicit decode collectives through the request layer, and
+elastic kill-rank recovery (see ``docs/serving.md``).  The wave policy is
+the legacy jax path (:class:`repro.serving.engine.ServeEngine`) on the
+reduced configs.
+
+    # serve 16 requests through the TP engine on 4 simulated ranks:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --batch-policy continuous --tp 4 --requests 16 --batch 4 \
+        --kv-pages 64 --max-new 16
+
+    # what will a step cost?  the serve_plan tables for both regimes:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --explain
+
+    # kill rank 3 mid-decode and watch the engine heal:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --tp 4 --kill-rank 3 --kill-at-step 2
+
+    # CI smoke (tiny end-to-end run, exits 0):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --dry-run
 """
 
 from __future__ import annotations
@@ -9,34 +29,105 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 import numpy as np
 
 from .. import configs
-from ..models import lm
-from ..serving.engine import ServeEngine
+from ..serving.engine import ContinuousBatchingEngine
+from ..serving.tp_lm import TPServeConfig
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true", default=True)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=32)
-    args = ap.parse_args()
+def _tp_config(cfg, prompt_len: int, max_new: int) -> TPServeConfig:
+    """Map a reduced arch config onto the TP serving model's shape (the
+    sim-channel engine mirrors the reduced dims; the full model serves on
+    the mesh path)."""
+    r = cfg.reduced()
+    return TPServeConfig(
+        vocab_size=r.vocab_size, d_model=r.d_model, n_heads=r.n_heads,
+        head_dim=r.hd, d_ff=r.d_ff, n_layers=r.n_layers,
+        max_len=prompt_len + max_new, ff_chunks=max(4, r.n_heads),
+    )
 
-    cfg = configs.get_reduced(args.arch)
-    if not cfg.supports_decode:
-        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
-    params = lm.init_params(cfg, jax.random.key(0))
-    eng = ServeEngine(cfg, params, batch=args.batch, max_len=args.prompt_len + args.max_new)
 
-    rng = np.random.default_rng(0)
+def _explain(cfg, args) -> None:
+    from ..core.selector import explain_serve_plan
+
+    print(f"production serve plan for {cfg.name} "
+          f"(full config, ici channel):\n")
+    print(explain_serve_plan(
+        cfg.d_model, cfg.n_layers, cfg.vocab_size, P=args.tp * 4,
+        batch=args.batch * 4, prompt_len=args.prompt_len * 64,
+        channels=("ici",), logits_mode=args.logits_mode,
+    ))
+    scfg = _tp_config(cfg, args.prompt_len, args.max_new)
+    print(f"\nreduced engine plan (what this launcher runs, "
+          f"sim channel, tp={args.tp}):\n")
+    with ContinuousBatchingEngine(
+        scfg, world=args.tp, max_slots=args.batch, kv_pages=args.kv_pages,
+        page_size=args.page_size, logits_mode=args.logits_mode,
+    ) as eng:
+        print(explain_serve_plan(
+            scfg.d_model, scfg.n_layers, scfg.vocab_size, P=args.tp,
+            batch=args.batch, prompt_len=args.prompt_len,
+            channels=(eng.channel,), logits_mode=args.logits_mode,
+            flops_per_token=scfg.flops_per_token))
+
+
+def _run_continuous(cfg, args) -> None:
+    scfg = _tp_config(cfg, args.prompt_len, args.max_new)
+    rng = np.random.default_rng(args.seed)
+    with ContinuousBatchingEngine(
+        scfg, world=args.tp, max_slots=args.batch, kv_pages=args.kv_pages,
+        page_size=args.page_size, seed=args.seed,
+        logits_mode=args.logits_mode,
+    ) as eng:
+        for _ in range(args.requests):
+            plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            eng.submit(rng.integers(0, scfg.vocab_size, plen),
+                       max_new=args.max_new)
+        t0 = time.perf_counter()
+        step = 0
+        heals = 0
+        while not eng.done:
+            if args.kill_rank is not None and step == args.kill_at_step:
+                print(f"step {step}: injecting failure of rank "
+                      f"{args.kill_rank} (mid-collective)")
+                eng.transport.kill(args.kill_rank, after_rounds=3)
+            done, healed = eng.step_or_heal()
+            if healed:
+                heals += 1
+                h = eng.controller.history[-1]
+                print(f"healed: regrouped to world={h['dp']} "
+                      f"(cancelled {h['cancelled']} in-flight, replayed "
+                      f"{h['step']} sequences from the KV-page manifest)")
+            if done:
+                print(f"step {step}: finished {done} "
+                      f"(active {len(eng.active)}, waiting "
+                      f"{len(eng.waiting)}, "
+                      f"pages {eng.kv.pages_in_use}/{eng.kv.n_pages})")
+            step += 1
+        dt = time.perf_counter() - t0
+        toks = eng.tokens_emitted
+        waits = sum(w for _, _, w in eng.comm_log)
+        print(f"served {len(eng.finished)} requests / {toks} tokens in "
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s greedy, tp={eng.world} "
+              f"sim ranks, {heals} heal(s), comm wait {waits*1e3:.1f}ms, "
+              f"peak pages {eng.kv.peak_in_use}/{eng.kv.n_pages})")
+
+
+def _run_wave(cfg, args) -> None:
+    import jax
+
+    from ..models import lm
+    from ..serving.engine import ServeEngine
+
+    rcfg = cfg.reduced()
+    params = lm.init_params(rcfg, jax.random.key(0))
+    eng = ServeEngine(rcfg, params, batch=args.batch,
+                      max_len=args.prompt_len + args.max_new)
+    rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):
-        eng.submit(rng.integers(0, cfg.vocab_size, args.prompt_len))
-
+        eng.submit(rng.integers(0, rcfg.vocab_size, args.prompt_len))
     done, t0 = 0, time.perf_counter()
     while eng._queue:
         out = eng.run_wave(max_new=args.max_new)
@@ -46,6 +137,56 @@ def main():
     toks = done * args.max_new
     print(f"served {done} requests / {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s greedy, reduced config on CPU)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch-policy", choices=["continuous", "wave"],
+                    default="continuous")
+    ap.add_argument("--tp", type=int, default=2,
+                    help="tensor-parallel world size (continuous policy)")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="max concurrent slots (continuous) / wave batch")
+    ap.add_argument("--kv-pages", type=int, default=64,
+                    help="KV page-pool size per rank shard")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--logits-mode", choices=["gather", "local-argmax"],
+                    default="gather")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kill-rank", type=int, default=None,
+                    help="inject a rank failure mid-decode (elastic demo)")
+    ap.add_argument("--kill-at-step", type=int, default=2)
+    ap.add_argument("--explain", action="store_true",
+                    help="print the serve_plan tables (prefill + decode) "
+                    "and exit")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny end-to-end smoke run (CI)")
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
+
+    if args.explain:
+        _explain(cfg, args)
+        return
+    if args.dry_run:
+        args.requests = min(args.requests, 3)
+        args.prompt_len = min(args.prompt_len, 4)
+        args.max_new = min(args.max_new, 4)
+        args.kv_pages = min(args.kv_pages, 16)
+        _run_continuous(cfg, args)
+        print("dry-run ok")
+        return
+    if args.batch_policy == "wave":
+        _run_wave(cfg, args)
+    else:
+        _run_continuous(cfg, args)
 
 
 if __name__ == "__main__":

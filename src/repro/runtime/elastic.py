@@ -33,7 +33,17 @@ module is that operation for the trainer.  One heal is five phases:
 
 The controller is policy + protocol — mesh/step rebuilding is delegated to
 callbacks so it is unit-testable without devices and reusable by the train
-driver, the fault-injection tests, and the recovery benchmark.
+driver, the fault-injection tests, the recovery benchmark, **and the
+serving runtime**: :class:`repro.serving.engine.ContinuousBatchingEngine`
+drives the same five phases with serving-flavoured callbacks — ``quiesce``
+cancels the stale generation's decode collectives and snapshots the
+**KV-page manifest** (:class:`repro.serving.kv_cache.KVPageManifest`),
+``rebuild`` re-maps the TP shards onto the regrouped world, and ``restore``
+*replays* every live sequence from the manifest instead of reading a
+checkpoint (the dead rank's head-shard KV pages are unrecoverable; token
+histories are tiny, so re-prefilling them is the reshard).  ``restore``'s
+return value is protocol-opaque: the trainer returns the resume step, the
+serving engine the number of replayed sequences.
 
 Example — a full heal driven by a fake clock (no devices needed)::
 
@@ -94,8 +104,9 @@ class ElasticController:
     * ``rebuild(new_size)`` — reconstruct mesh/communicators/step functions
       for the new data-parallel degree (``GroupBuild`` details — old-rank →
       new-rank map, spares — are on ``self.last_build``).
-    * ``restore() -> step`` — reload the latest committed checkpoint onto
-      the new topology; returns the step to resume from.
+    * ``restore() -> step`` — reload the latest committed state onto the
+      new topology (trainer: checkpoint restore; serving engine: KV-page
+      manifest replay); returns the point to resume from.
     * ``quiesce() -> n_cancelled`` (optional) — cancel in-flight
       communication (typically ``scheduler.abort(generation)``); runs
       *before* rebuild so no stale request is ever waited on the new group.

@@ -1,3 +1,19 @@
-from .engine import ServeConfig, make_serve_fns, ServeEngine
+from .engine import (
+    ContinuousBatchingEngine,
+    ServeConfig,
+    ServeEngine,
+    make_serve_fns,
+)
+from .kv_cache import KVPageManifest, OutOfPages, PagedKVCache
+from .tp_lm import TPServeConfig
 
-__all__ = ["ServeConfig", "make_serve_fns", "ServeEngine"]
+__all__ = [
+    "ServeConfig",
+    "make_serve_fns",
+    "ServeEngine",
+    "ContinuousBatchingEngine",
+    "PagedKVCache",
+    "KVPageManifest",
+    "OutOfPages",
+    "TPServeConfig",
+]

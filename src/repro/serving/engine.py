@@ -1,20 +1,49 @@
-"""Serving: sharded prefill + decode steps and a batched request engine.
+"""Serving engines: mesh wave batching and FMI continuous batching.
 
-``make_serve_fns`` builds the jitted, mesh-sharded ``prefill`` and
-``decode_step`` closures the dry-run lowers for the decode_32k / long_500k
-cells: the KV cache is sharded batch-over-data and kv-heads-over-model, the
-cache is donated every step (in-place update at scale), and the token path
-is the absorbed-MLA / ring-SWA / recurrent-state decode of each family.
+Two serving paths share this module (see ``docs/serving.md`` for the full
+architecture):
 
-``ServeEngine`` is a wave-batched request loop (static batch slots, shared
-position counter): requests queue up, a wave prefills together, then decodes
-until every slot hits its stop length.  Continuous (per-slot-position)
-batching is documented as future work in DESIGN.md — rope and cache writes
-are already per-batch-row capable (``positions`` may be [B, T]).
+**Mesh path** — ``make_serve_fns`` builds the jitted, mesh-sharded
+``prefill`` and ``decode_step`` closures the dry-run lowers for the
+decode_32k / long_500k cells: the KV cache is sharded batch-over-data and
+kv-heads-over-model, the cache is donated every step (in-place update at
+scale), and the token path is the absorbed-MLA / ring-SWA / recurrent-state
+decode of each family.  ``ServeEngine`` is its wave-batched request loop
+(static batch slots, shared position counter): requests queue up, a wave
+prefills together, then decodes until every slot hits its stop length.
+
+**FMI path** — :class:`ContinuousBatchingEngine` is the tensor-parallel
+continuous-batching runtime: per decode step it *evicts* finished
+sequences, *admits* waiting ones (page-reservation gate on the rank-sharded
+:class:`~repro.serving.kv_cache.PagedKVCache`), prefills admitted prompts
+in the bandwidth-bound regime and decodes the live batch in the
+latency-bound regime, with every collective issued through the nonblocking request layer
+on an engine-owned instrumented channel.  A rank killed mid-decode heals
+through the elastic runtime protocol (quiesce → regroup → replay from the
+KV-page manifest) and — because the TP forward is bit-exact across world
+sizes — resumes on exactly the trajectory the unfailed run would have
+taken.
+
+Doctest — continuous batching end to end on two simulated ranks::
+
+    >>> from repro.serving.tp_lm import TPServeConfig
+    >>> cfg = TPServeConfig(vocab_size=32, d_model=16, n_heads=4, head_dim=4,
+    ...                     d_ff=32, n_layers=1, max_len=16, ff_chunks=4)
+    >>> eng = ContinuousBatchingEngine(cfg, world=2, max_slots=2, kv_pages=8,
+    ...                                page_size=4)
+    >>> for prompt in ([1, 2, 3], [4, 5], [6]):
+    ...     _ = eng.submit(prompt, max_new=3)
+    >>> out = eng.run()
+    >>> sorted(out), sorted(len(v) for v in out.values())
+    ([0, 1, 2], [3, 3, 3])
+    >>> eng.transport.trace.pending      # every request drained
+    0
+    >>> eng.close()
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 import jax
@@ -23,9 +52,14 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..core.communicator import Communicator
+from ..core.requests import RequestQueue
 from ..models import lm
 from ..models.config import ModelConfig
 from ..models.layers import Axes
+from . import tp_lm
+from .kv_cache import KVPageManifest, OutOfPages, PagedKVCache
+from .tp_lm import TPServeConfig
 
 
 @dataclass(frozen=True)
@@ -139,3 +173,348 @@ class ServeEngine:
             pos += 1
         gen = np.concatenate([np.asarray(o) for o in out], axis=1)
         return [gen[i] for i in range(B)]
+
+
+# ---------------------------------------------------------------------------
+# FMI continuous-batching engine (TP over an engine-owned software channel)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _SeqState:
+    prompt: list
+    max_new: int
+    generated: list
+
+
+class ContinuousBatchingEngine:
+    """Tensor-parallel continuous batching over the FMI request layer.
+
+    One :meth:`step` is the continuous-batching cycle:
+
+    1. **decode** — every active sequence advances one token: the TP
+       forward issues two latency-bound partial allreduces per layer and
+       the token-emission collective (logits-shard allgather, or the
+       8-byte ``local-argmax`` exchange) is left **in flight**;
+    2. **admit** — waiting requests are admitted while a slot and their
+       full page reservation (``prompt + max_new`` tokens) are available;
+       each admit prefills in one bandwidth-bound pass.  The decode
+       emission request stays undrained across the admission work
+       (MPI-style deferred completion — the same convention the request
+       layer documents for jax transports); wire-level overlap appears
+       where the selector prices it in, via the chunk-pipelining depth of
+       the bandwidth-bound prefill collectives;
+    3. **drain** — emissions complete, tokens append, finished sequences
+       evict (their pages free for the next step's admissions).
+
+    The engine owns a private registered channel (an instrumented
+    :class:`~repro.core.transport.SimTransport` by default) so traces,
+    fault injection (``engine.transport.kill``) and regrouping stay under
+    its control; :meth:`close` unregisters it.
+
+    Elasticity: :meth:`step_or_heal` runs a step under the runtime's
+    detect → quiesce → regroup → reshard protocol
+    (:class:`repro.runtime.elastic.ElasticController`).  ``restore``
+    replays every live sequence from the KV-page manifest at the regrouped
+    world size; bit-exactness across world sizes means the healed run
+    emits exactly the tokens the unfailed run would have.
+    """
+
+    _n_engines = 0  # suffix for unique per-engine channel names
+
+    def __init__(self, cfg: TPServeConfig | None = None, *, world: int = 1,
+                 max_slots: int = 4, kv_pages: int = 64, page_size: int = 8,
+                 params: dict | None = None, seed: int = 0,
+                 logits_mode: str = "gather", max_new_default: int = 16,
+                 objective: str = "time", strategy: str = "pow2_floor"):
+        from ..core import channels as CH
+        from ..core.models import ChannelSpec
+        from ..runtime import ElasticController, Membership
+
+        self.cfg = cfg if cfg is not None else TPServeConfig()
+        self.cfg.validate_world(world)
+        if logits_mode not in ("gather", "local-argmax"):
+            raise ValueError(f"unknown logits_mode {logits_mode!r}")
+        self.max_slots = int(max_slots)
+        self.kv_pages = int(kv_pages)
+        self.page_size = int(page_size)
+        self.logits_mode = logits_mode
+        self.max_new_default = int(max_new_default)
+        self.objective = objective
+        self.logical = params if params is not None else tp_lm.init_params(
+            self.cfg, seed)
+        self.weights = tp_lm.split_weights(self.logical, self.cfg)
+
+        self.queue = RequestQueue()
+        self.comm_log: list = []  # (op, nbytes, wait_s) per drained request
+        self._waiting: deque = deque()
+        self._states: dict[int, _SeqState] = {}
+        self._active: list[int] = []
+        self.finished: dict[int, np.ndarray] = {}
+        self._next_id = 0
+        self.steps = 0
+        self.tokens_emitted = 0
+
+        self.membership = Membership(expected=world)
+        for r in range(world):
+            self.membership.join(r)
+        self.controller = ElasticController(
+            membership=self.membership, rebuild=self._rebuild,
+            restore=self._replay, quiesce=self._quiesce, strategy=strategy,
+        )
+
+        # engine-owned instrumented channel (sim α-β constants).  private=
+        # True keeps it out of default_channels(): resolvable by name, never
+        # enumerated by unrelated algorithm='auto' selections.
+        self._box: dict = {"t": None}
+        ContinuousBatchingEngine._n_engines += 1
+        self.channel = f"serve{ContinuousBatchingEngine._n_engines}"
+        CH.register_channel(
+            ChannelSpec(self.channel, alpha=5e-6, beta=1 / 16e9,
+                        kind="direct", push=True),
+            transport_factory=lambda **kw: self._box["t"],
+            private=True,
+        )
+        self._closed = False
+        try:
+            self.comm = Communicator(axes=("data",), sizes=(world,),
+                                     channel=self.channel)
+            self._build_world(world)
+        except BaseException:
+            self.close()  # never leak the registration on a failed init
+            raise
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        """Unregister the engine's private channel (idempotent)."""
+        if not self._closed:
+            from ..core import channels as CH
+
+            CH.unregister(self.channel)
+            self._closed = True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    @property
+    def world(self) -> int:
+        return self.comm.size
+
+    @property
+    def transport(self):
+        """The live instrumented transport (fault injection entry point)."""
+        return self._box["t"]
+
+    def _build_world(self, world: int) -> None:
+        from ..core.transport import SimTransport
+
+        self.cfg.validate_world(world)
+        self._box["t"] = SimTransport(world)
+        if self.comm.size != world:
+            self.comm = self.comm.regroup(sizes=(world,))
+        self.kv = PagedKVCache(
+            self.cfg.n_layers, self.kv_pages, self.page_size,
+            heads_local=self.cfg.n_heads // world,
+            head_dim=self.cfg.head_dim, world=world,
+        )
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, prompt_tokens, max_new: int | None = None) -> int:
+        """Queue one request; returns its sequence id."""
+        prompt = [int(t) for t in np.asarray(prompt_tokens).reshape(-1)]
+        if not prompt:
+            raise ValueError("empty prompt")
+        max_new = self.max_new_default if max_new is None else int(max_new)
+        total = len(prompt) + max_new
+        if total > self.cfg.max_len:
+            raise ValueError(f"prompt+max_new {total} exceeds max_len "
+                             f"{self.cfg.max_len}")
+        if self.kv.pages_for(total) > self.kv.n_pages:
+            raise ValueError(f"request needs {self.kv.pages_for(total)} "
+                             f"pages; pool only has {self.kv.n_pages}")
+        sid = self._next_id
+        self._next_id += 1
+        self._states[sid] = _SeqState(prompt=prompt, max_new=max_new,
+                                      generated=[])
+        self._waiting.append(sid)
+        return sid
+
+    @property
+    def waiting(self) -> tuple[int, ...]:
+        return tuple(self._waiting)
+
+    @property
+    def active(self) -> tuple[int, ...]:
+        return tuple(self._active)
+
+    @property
+    def done(self) -> bool:
+        return not self._waiting and not self._active
+
+    # -- the continuous-batching cycle --------------------------------------
+    def _emit(self, shard) -> "object":
+        """Issue the token-emission collective for a logits shard."""
+        if self.logits_mode == "gather":
+            req = tp_lm.gather_logits(self.comm, shard, self.queue)
+            return req, lambda out: np.argmax(out[0], axis=-1)
+        req = tp_lm.local_argmax(self.comm, shard, self.queue)
+        return req, lambda out: out[0]
+
+    def _forward(self, sids, tokens, positions):
+        return tp_lm.forward_tokens(
+            self.weights, self.cfg, self.comm, self.kv, sids, tokens,
+            positions, queue=self.queue, comm_log=self.comm_log,
+        )
+
+    def step(self) -> list[int]:
+        """One admit/decode/evict cycle.  Returns the sequence ids that
+        finished this step (their outputs land in :attr:`finished`)."""
+        decode_req = None
+        batch = list(self._active)
+        if batch:
+            tokens = np.array([[self._states[s].generated[-1]]
+                               for s in batch])
+            positions = np.array([[self.kv.length(s)] for s in batch])
+            shard = self._forward(batch, tokens, positions)
+            for s in batch:
+                self.kv.advance(s, 1)
+            decode_req = self._emit(shard)
+
+        # admissions: prefill while the decode emission is still in flight
+        prefill_reqs = []
+        while len(self._active) < self.max_slots and self._waiting:
+            sid = self._waiting[0]
+            st = self._states[sid]
+            try:
+                self.kv.alloc(sid, capacity=len(st.prompt) + st.max_new)
+            except OutOfPages:
+                break
+            toks = np.array([st.prompt])
+            pos = np.arange(len(st.prompt))[None]
+            # a RankFailure inside this prefill leaves the request queued:
+            # the pop below only commits once the forward has completed (the
+            # heal discards the whole cache, so the partial alloc is moot)
+            shard = self._forward([sid], toks, pos)
+            self.kv.advance(sid, len(st.prompt))
+            self._waiting.popleft()
+            self._active.append(sid)  # live from here on: the manifest (and
+            # a replay) covers it even if a later prefill hits a failure
+            prefill_reqs.append((sid, self._emit(shard)))
+
+        # drain: decode emission first (issue order), then the prefills
+        finished = []
+        if decode_req is not None:
+            req, pick = decode_req
+            toks = pick(req.wait())
+            for i, s in enumerate(batch):
+                self._states[s].generated.append(int(toks[i]))
+                self.tokens_emitted += 1
+        for sid, (req, pick) in prefill_reqs:
+            tok = pick(req.wait())
+            self._states[sid].generated.append(int(tok[0]))
+            self.tokens_emitted += 1
+        self.queue.waitall()  # retire completed requests from the queue
+
+        for s in list(self._active):
+            st = self._states[s]
+            if len(st.generated) >= st.max_new:
+                self.kv.free(s)
+                self._active.remove(s)
+                self.finished[s] = np.asarray(st.generated, np.int64)
+                finished.append(s)
+        self.steps += 1
+        return finished
+
+    def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Serve until every submitted request finishes (or ``max_steps``);
+        heals on the way if ranks die.  Returns ``{seq_id: generated}``."""
+        n = 0
+        while not self.done and (max_steps is None or n < max_steps):
+            self.step_or_heal()
+            n += 1
+        return dict(self.finished)
+
+    # -- elasticity: detect -> quiesce -> regroup -> replay ------------------
+    def step_or_heal(self) -> tuple[list[int], bool]:
+        """Run one step under failure protection.  On a
+        :class:`~repro.core.transport.RankFailure` the elastic controller
+        quiesces in-flight requests, regroups the survivors, and replays
+        every live sequence from the KV-page manifest; the interrupted
+        step's tokens are re-derived by the replay itself."""
+        # lockstep liveness: this driver IS every rank, so each cycle beats
+        # the whole current group — failure detection here is transport
+        # evidence (RankFailure), not timers; the heartbeat path matters on
+        # real multi-host deployments (paper §3.1)
+        for r in self.membership.group():
+            self.membership.heartbeat(r)
+        out: list[int] = []
+        healed = self.controller.step_or_heal(
+            lambda: out.extend(self.step()))
+        return out, healed
+
+    def manifest(self) -> KVPageManifest:
+        """The KV-page manifest: everything needed to rebuild the live
+        batch elsewhere (token history + page accounting per sequence)."""
+        man = KVPageManifest(world=self.world,
+                             generation=self.comm.generation)
+        for s in self._active:
+            st = self._states[s]
+            man.seqs[s] = {
+                "tokens": list(st.prompt) + list(st.generated),
+                "n_prompt": len(st.prompt), "max_new": st.max_new,
+                **self.kv.manifest_entry(s),
+            }
+        return man
+
+    def _quiesce(self) -> int:
+        self._replay_manifest = self.manifest()
+        return self.queue.cancel_all(self.comm.generation)
+
+    def _rebuild(self, world: int) -> None:
+        self._build_world(world)
+
+    def _replay(self) -> int:
+        """Re-prefill every manifest sequence at the new world size and
+        re-derive the token the failed step was computing."""
+        man = self._replay_manifest
+        replayed = 0
+        for sid in man.live:
+            entry = man.seqs[sid]
+            st = self._states[sid]
+            self.kv.alloc(sid, capacity=entry["n_prompt"] + entry["max_new"])
+            toks = np.array([entry["tokens"]])
+            pos = np.arange(toks.shape[1])[None]
+            shard = self._forward([sid], toks, pos)
+            self.kv.advance(sid, toks.shape[1])
+            req, pick = self._emit(shard)
+            st.generated.append(int(pick(req.wait())[0]))
+            self.tokens_emitted += 1
+            replayed += 1
+        self.queue.waitall()
+        # a replay can complete a sequence outright
+        for s in list(self._active):
+            st = self._states[s]
+            if len(st.generated) >= st.max_new:
+                self.kv.free(s)
+                self._active.remove(s)
+                self.finished[s] = np.asarray(st.generated, np.int64)
+        return replayed
+
+    # -- model-driven plan ---------------------------------------------------
+    def serve_plan(self, prompt_len: int = 64, **kwargs):
+        """The per-step cost plan for this engine's shape on its channel
+        (see :func:`repro.core.selector.serve_plan`)."""
+        from ..core.selector import serve_plan as _serve_plan
+
+        return _serve_plan(
+            d_model=self.cfg.d_model, n_layers=self.cfg.n_layers,
+            vocab_size=self.cfg.vocab_size, P=self.world,
+            batch=self.max_slots, prompt_len=prompt_len,
+            channels=(self.channel,), objective=self.objective,
+            flops_per_token=self.cfg.flops_per_token,
+            logits_mode=self.logits_mode, **kwargs,
+        )

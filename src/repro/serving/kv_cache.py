@@ -1,0 +1,264 @@
+"""Rank-sharded paged KV cache for the tensor-parallel serving engine.
+
+Serving memory is dominated by the KV cache, and continuous batching lives
+or dies by how that memory is managed: requests arrive and finish at
+different times, so the cache must be allocated and reclaimed in fixed-size
+**pages** rather than one contiguous arena per request (the vLLM insight,
+transplanted to the FMI setting).  This module owns that bookkeeping:
+
+* the **page pool** is a fixed tensor ``[layers, P, n_pages, page_size,
+  heads_local, head_dim]`` — the leading ``P`` axis is the stacked-rank
+  convention of the software transports, and ``heads_local = heads / P`` is
+  the **tensor-parallel shard**: each rank stores the KV pages of its own
+  attention heads only (the cache, like the weights, is rank-sharded; page
+  *tables* are replicated across ranks, as in every TP serving stack);
+* a sequence **reserves its worst-case page budget at admission**
+  (``prompt + max_new`` tokens, rounded up to whole pages).  Admission is
+  the only operation that can fail with :class:`OutOfPages`, so a running
+  decode step never preempts — the continuous-batching engine's admit gate
+  is exactly ``free_pages >= pages_for(capacity)``;
+* :meth:`PagedKVCache.manifest_entry` exports the page accounting of one
+  sequence — together with the engine's token log this forms the
+  **KV-page manifest** the elastic runtime replays from after a rank dies
+  mid-decode (the dead rank's head-shard pages are gone; survivors re-prefill
+  from the manifest at the new, coarser sharding).
+
+Example — two sequences through one pool::
+
+    >>> kv = PagedKVCache(layers=1, n_pages=4, page_size=8, heads_local=2,
+    ...                   head_dim=4, world=1)
+    >>> kv.alloc(7, capacity=12)        # 12 tokens -> 2 pages
+    (0, 1)
+    >>> kv.alloc(9, capacity=8)
+    (2,)
+    >>> kv.free_pages, kv.pages_in_use
+    (1, 3)
+    >>> kv.alloc(11, capacity=16)       # needs 2, only 1 left
+    Traceback (most recent call last):
+        ...
+    repro.serving.kv_cache.OutOfPages: seq 11 needs 2 page(s), 1 free (pool of 4)
+    >>> import numpy as np
+    >>> k = np.ones((1, 1, 3, 2, 4), np.float32)      # [L, P, T=3, Hl, hd]
+    >>> kv.append(7, k, k)              # prefill 3 tokens
+    >>> kv.length(7), kv.capacity(7)
+    (3, 12)
+    >>> kv.gather(7)[0].shape           # padded to the page reservation
+    (1, 1, 16, 2, 4)
+    >>> kv.manifest_entry(7)
+    {'pages': (0, 1), 'length': 3, 'capacity': 12}
+    >>> kv.free(7)
+    2
+    >>> kv.free_pages
+    3
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    """Admission failed: the page pool cannot cover the sequence's
+    worst-case (prompt + max_new) reservation."""
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    """Pages covering ``tokens`` (at least one) — the single definition of
+    the rounding policy behind every reservation.
+
+    >>> pages_needed(17, 8)
+    3
+    """
+    return max(1, -(-int(tokens) // int(page_size)))
+
+
+@dataclass
+class _Seq:
+    pages: tuple[int, ...]
+    capacity: int  # reserved tokens (pages * page_size covers this)
+    length: int = 0  # tokens actually written
+
+
+@dataclass
+class KVPageManifest:
+    """What survives a rank failure: enough to rebuild every live sequence.
+
+    ``seqs`` maps sequence id to ``{"tokens", "n_prompt", "max_new",
+    "pages", "length"}`` — the full token history (prompt + generated so
+    far) plus the page accounting at failure time.  The pages themselves
+    are *not* carried (the dead rank's head shard is unrecoverable); the
+    elastic heal re-prefills ``tokens`` into a fresh
+    :class:`PagedKVCache` at the regrouped world size and resumes decoding
+    — see ``docs/serving.md`` and
+    :meth:`repro.serving.engine.ContinuousBatchingEngine.step_or_heal`.
+    """
+
+    world: int
+    generation: int
+    seqs: dict[int, dict[str, Any]] = field(default_factory=dict)
+
+    @property
+    def live(self) -> tuple[int, ...]:
+        return tuple(sorted(self.seqs))
+
+
+class PagedKVCache:
+    """Paged, rank-sharded KV storage (see module docstring).
+
+    ``world`` is the stacked-rank axis of the pools; ``heads_local`` the
+    per-rank head shard.  All write/read paths take/return arrays shaped
+    ``[layers, world, T, heads_local, head_dim]``.
+    """
+
+    def __init__(self, layers: int, n_pages: int, page_size: int,
+                 heads_local: int, head_dim: int, world: int,
+                 dtype=np.float32):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.layers = int(layers)
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.heads_local = int(heads_local)
+        self.head_dim = int(head_dim)
+        self.world = int(world)
+        shape = (self.layers, self.world, self.n_pages, self.page_size,
+                 self.heads_local, self.head_dim)
+        self.k_pool = np.zeros(shape, dtype)
+        self.v_pool = np.zeros(shape, dtype)
+        self._free: list[int] = list(range(self.n_pages))
+        self._seqs: dict[int, _Seq] = {}
+        # accounting the admit/evict invariant tests pin down
+        self.allocs = 0
+        self.frees = 0
+        self.peak_in_use = 0
+
+    # -- allocation ---------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        """Pages covering ``tokens`` (at least one)."""
+        return pages_needed(tokens, self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    @property
+    def live_seqs(self) -> tuple[int, ...]:
+        return tuple(sorted(self._seqs))
+
+    def alloc(self, seq_id: int, capacity: int) -> tuple[int, ...]:
+        """Reserve pages for ``capacity`` tokens.  Raises :class:`OutOfPages`
+        when the pool cannot cover the reservation (the admission gate)."""
+        if seq_id in self._seqs:
+            raise ValueError(f"seq {seq_id} already allocated")
+        need = self.pages_for(capacity)
+        if need > len(self._free):
+            raise OutOfPages(
+                f"seq {seq_id} needs {need} page(s), {len(self._free)} free "
+                f"(pool of {self.n_pages})"
+            )
+        pages = tuple(self._free[:need])
+        del self._free[:need]
+        self._seqs[seq_id] = _Seq(pages=pages, capacity=int(capacity))
+        self.allocs += 1
+        self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        return pages
+
+    def free(self, seq_id: int) -> int:
+        """Evict: return the sequence's pages to the pool (zeroed so a later
+        reuse never sees stale keys).  Returns the number of pages freed."""
+        seq = self._seqs.pop(seq_id)
+        for p in seq.pages:
+            self.k_pool[:, :, p] = 0.0
+            self.v_pool[:, :, p] = 0.0
+        self._free.extend(seq.pages)
+        self.frees += 1
+        return len(seq.pages)
+
+    # -- data path ----------------------------------------------------------
+    def _slots(self, seq: _Seq, start: int, n: int):
+        """(page, offset) pairs for token positions [start, start+n)."""
+        for t in range(start, start + n):
+            yield seq.pages[t // self.page_size], t % self.page_size
+
+    def append(self, seq_id: int, k: np.ndarray, v: np.ndarray) -> None:
+        """Write ``T`` new tokens' K/V (``[L, P, T, Hl, hd]``) at the
+        sequence's current length."""
+        seq = self._seqs[seq_id]
+        T = k.shape[2]
+        if seq.length + T > seq.capacity:
+            raise ValueError(
+                f"seq {seq_id}: append of {T} exceeds capacity {seq.capacity} "
+                f"(length {seq.length})"
+            )
+        for i, (page, off) in enumerate(self._slots(seq, seq.length, T)):
+            self.k_pool[:, :, page, off] = k[:, :, i]
+            self.v_pool[:, :, page, off] = v[:, :, i]
+        seq.length += T
+
+    def gather(self, seq_id: int,
+               layer: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """Contiguous K and V of the sequence — ``[P, pages*page_size, Hl,
+        hd]`` for one ``layer``, or ``[L, P, ...]`` for all layers when
+        ``layer`` is None.  The forward pass gathers per layer (copying
+        every layer's pages inside the layer loop would be O(L²) traffic).
+        Positions beyond :meth:`length` are exact zeros — the attention
+        mask (not the gather) excludes them, and the fixed page-aligned
+        padding keeps the reduction shape identical between an incremental
+        decode and a manifest replay (the bit-exactness argument in
+        ``docs/serving.md``)."""
+        seq = self._seqs[seq_id]
+        if layer is None:
+            k = np.concatenate([self.k_pool[:, :, p] for p in seq.pages],
+                               axis=2)
+            v = np.concatenate([self.v_pool[:, :, p] for p in seq.pages],
+                               axis=2)
+        else:
+            k = np.concatenate([self.k_pool[layer][:, p] for p in seq.pages],
+                               axis=1)
+            v = np.concatenate([self.v_pool[layer][:, p] for p in seq.pages],
+                               axis=1)
+        return k, v
+
+    def slot(self, seq_id: int, position: int) -> tuple[int, int]:
+        """``(page, offset)`` of an absolute token ``position`` within the
+        sequence's reservation (the TP forward writes K/V through this)."""
+        seq = self._seqs[seq_id]
+        if not 0 <= position < len(seq.pages) * self.page_size:
+            raise IndexError(
+                f"position {position} outside seq {seq_id}'s reservation"
+            )
+        return seq.pages[position // self.page_size], position % self.page_size
+
+    def advance(self, seq_id: int, n: int = 1) -> int:
+        """Commit ``n`` newly written tokens (the engine calls this after a
+        forward pass wrote their K/V at the absolute slots).  Returns the
+        new length."""
+        seq = self._seqs[seq_id]
+        if seq.length + n > seq.capacity:
+            raise ValueError(
+                f"seq {seq_id}: advance past capacity {seq.capacity}"
+            )
+        seq.length += n
+        return seq.length
+
+    def length(self, seq_id: int) -> int:
+        return self._seqs[seq_id].length
+
+    def capacity(self, seq_id: int) -> int:
+        return self._seqs[seq_id].capacity
+
+    def padded_len(self, seq_id: int) -> int:
+        return len(self._seqs[seq_id].pages) * self.page_size
+
+    def manifest_entry(self, seq_id: int) -> dict[str, Any]:
+        """Page accounting of one sequence for the KV-page manifest."""
+        seq = self._seqs[seq_id]
+        return {"pages": seq.pages, "length": seq.length,
+                "capacity": seq.capacity}

@@ -1,0 +1,374 @@
+"""Tensor-parallel decoder LM over the FMI software channels.
+
+The mesh serving path (``serving.engine.make_serve_fns``) shards the full
+jax model with GSPMD and lets XLA place the collectives.  This module is
+the **FMI-side** counterpart: a small transformer whose tensor-parallel
+collectives are issued *explicitly* through :mod:`repro.core.requests` on a
+:class:`~repro.core.transport.SimTransport`-class channel, so the serving
+runtime exercises — and the trace observes — exactly the per-step traffic
+the :func:`repro.core.selector.serve_plan` model prices:
+
+* **attention** is head-sharded: rank ``r`` owns heads ``[r·H/P,
+  (r+1)·H/P)`` and stores only their KV pages (the rank-sharded cache of
+  :mod:`repro.serving.kv_cache`); the output projection is row-parallel, so
+  every rank contributes a partial ``[B, T, D]`` that an **allreduce of TP
+  partials** combines;
+* the **MLP** is column-parallel up (no traffic) and row-parallel down
+  (second partial allreduce per layer) over a fixed ``ff_chunks`` grid;
+* the **logits head** is vocab-sharded: each rank emits ``[B, V/P]`` and an
+  **allgather of logits shards** rebuilds the full distribution (or, under
+  ``logits_mode='local-argmax'``, each rank ships only its shard's
+  ``(max, argmax)`` pair — 8 bytes instead of ``V/P·itemsize``, the FMI
+  "cheap messages" trick; both modes emit identical tokens).
+
+Prefill runs all prompt positions through one batched pass — per layer one
+bandwidth-bound ``[B·T·D]`` partial allreduce — while decode issues
+latency-bound ``[B·D]`` messages per layer per token.  That payload split
+is exactly the two regimes :func:`repro.core.selector.serve_plan` prices.
+
+Determinism contract (the bit-exactness the test suite pins)
+------------------------------------------------------------
+Floating-point summation order is the only thing that can make two
+executions of the same math differ, so this module pins it twice over:
+
+1. **Fixed-shape operands.**  Every contraction runs on per-token vectors
+   against per-head / per-chunk weight matrices whose shapes depend only
+   on the model config and the sequence's page reservation — never on the
+   world size, the batch composition, or the prompt length.  Identical
+   operand shapes + identical values ⇒ identical bits, no matter how BLAS
+   blocks the loop.  (Masked attention slots score ``-inf``, whose ``exp``
+   is an exact ``+0.0``, and the KV gather always returns the full page
+   reservation — so an incremental decode, a batched prefill, and a
+   manifest replay all reduce over the same shapes.)
+2. **Fixed reduction trees.**  Row-parallel partials are combined as a
+   balanced pairwise tree over a fixed chunk grid (heads for attention,
+   ``ff_chunks`` for the MLP): ranks fold their contiguous local chunks
+   pairwise (:func:`tree_sum`) and ``recursive_doubling`` folds the rank
+   partials — the same global tree at every power-of-two ``P`` (f32
+   addition is commutative, so exchange order inside a round is
+   irrelevant; only the tree shape matters, and the tree shape is pinned).
+
+Hence ``P = 1`` (the single-rank reference) and any pow2 ``P | heads``
+produce bit-identical logits, and a killed-and-replayed decode continues
+on exactly the trajectory the unfailed run would have taken.
+
+Example — the same prefill at world 1 and 2 is bit-exact::
+
+    >>> import numpy as np
+    >>> from repro.core.communicator import Communicator
+    >>> cfg = TPServeConfig(vocab_size=64, d_model=16, n_heads=4, head_dim=4,
+    ...                     d_ff=32, n_layers=1, max_len=8, ff_chunks=4)
+    >>> weights = split_weights(init_params(cfg, seed=0), cfg)
+    >>> toks = np.array([[5, 9, 2]])
+    >>> outs = {}
+    >>> for P in (1, 2):
+    ...     comm = Communicator(axes=("data",), sizes=(P,), channel="sim")
+    ...     outs[P] = prefill_logits(weights, cfg, comm, toks)
+    >>> bool(np.array_equal(outs[1][0], outs[2][0]))
+    True
+"""
+
+from __future__ import annotations
+
+import math
+import time as _time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.communicator import Communicator
+from ..core.requests import Request
+
+
+@dataclass(frozen=True)
+class TPServeConfig:
+    """Shape of the TP serving model.  ``n_heads``, ``ff_chunks`` and
+    ``vocab_size`` must be divisible by every world size served;
+    ``ff_chunks`` is the *fixed* partial-sum granularity of the
+    row-parallel MLP and of the vocab-sharded head (the chunk grid the
+    pairwise reduction tree — and the shard boundaries — are built over,
+    independent of ``P``)."""
+
+    vocab_size: int = 256
+    d_model: int = 32
+    n_heads: int = 4
+    head_dim: int = 8
+    d_ff: int = 64
+    n_layers: int = 2
+    max_len: int = 64
+    ff_chunks: int = 4
+
+    def validate_world(self, P: int) -> None:
+        if P < 1 or P & (P - 1):
+            raise ValueError(f"world {P} must be a power of two")
+        for dim, name in ((self.n_heads, "n_heads"),
+                          (self.ff_chunks, "ff_chunks"),
+                          (self.vocab_size, "vocab_size")):
+            if dim % P:
+                raise ValueError(f"world {P} does not divide {name}={dim}")
+        if self.d_ff % self.ff_chunks or self.vocab_size % self.ff_chunks:
+            raise ValueError("ff_chunks must divide d_ff and vocab_size")
+
+    @property
+    def flops_per_token(self) -> float:
+        """2·params matmul FLOPs per token (serve_plan's compute term)."""
+        D, H, hd, F = self.d_model, self.n_heads, self.head_dim, self.d_ff
+        per_layer = 4 * D * H * hd + 2 * D * F  # qkv+wo, up+down
+        return 2.0 * (self.n_layers * per_layer + D * self.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: TPServeConfig, seed: int = 0) -> dict:
+    """Logical (unsharded) weights — the serving 'checkpoint' the elastic
+    heal re-maps onto the regrouped world after a rank failure."""
+    rng = np.random.default_rng(seed)
+    D, H, hd, F, V = (cfg.d_model, cfg.n_heads, cfg.head_dim, cfg.d_ff,
+                      cfg.vocab_size)
+    w = lambda *s: (rng.normal(size=s) * 0.08).astype(np.float32)  # noqa: E731
+    layers = [
+        {
+            "wq": w(D, H, hd), "wk": w(D, H, hd), "wv": w(D, H, hd),
+            "wo": w(H, hd, D), "w_up": w(D, F), "w_down": w(F, D),
+        }
+        for _ in range(cfg.n_layers)
+    ]
+    return {"embed": w(V, D), "pos": w(cfg.max_len, D), "head": w(D, V),
+            "layers": layers}
+
+
+def split_weights(logical: dict, cfg: TPServeConfig) -> dict:
+    """Pre-split the weights along the fixed chunk grid: one contiguous
+    ``[D, hd]`` (etc.) array per head / per ``ff_chunks`` chunk.  The split
+    is **world-size independent** — rank ``r`` of a ``P``-way group simply
+    owns the contiguous range ``[r·chunks/P, (r+1)·chunks/P)`` — which is
+    what makes regrouping to a new ``P`` a pure ownership re-mapping."""
+    C = lambda a: np.ascontiguousarray(a, np.float32)  # noqa: E731
+    Vc = cfg.vocab_size // cfg.ff_chunks
+    Fc = cfg.d_ff // cfg.ff_chunks
+    layers = [
+        {
+            "wq": [C(l["wq"][:, h]) for h in range(cfg.n_heads)],
+            "wk": [C(l["wk"][:, h]) for h in range(cfg.n_heads)],
+            "wv": [C(l["wv"][:, h]) for h in range(cfg.n_heads)],
+            "wo": [C(l["wo"][h]) for h in range(cfg.n_heads)],
+            "w_up": [C(l["w_up"][:, c * Fc:(c + 1) * Fc])
+                     for c in range(cfg.ff_chunks)],
+            "w_down": [C(l["w_down"][c * Fc:(c + 1) * Fc])
+                       for c in range(cfg.ff_chunks)],
+        }
+        for l in logical["layers"]
+    ]
+    head = [C(logical["head"][:, c * Vc:(c + 1) * Vc])
+            for c in range(cfg.ff_chunks)]
+    return {"embed": C(logical["embed"]), "pos": C(logical["pos"]),
+            "head": head, "layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Deterministic numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def tree_sum(parts: list) -> np.ndarray:
+    """Balanced pairwise sum over a power-of-two list.  Matches the
+    reduction tree of ``recursive_doubling`` allreduce, so local-chunk
+    folding composes with the cross-rank fold into one fixed global tree.
+
+    >>> import numpy as np
+    >>> xs = [np.float32(x) for x in (0.1, 0.2, 0.3, 0.4)]
+    >>> bool(tree_sum(xs) == (xs[0] + xs[1]) + (xs[2] + xs[3]))
+    True
+    """
+    parts = list(parts)
+    while len(parts) > 1:
+        parts = [parts[i] + parts[i + 1] for i in range(0, len(parts), 2)]
+    return parts[0]
+
+
+def _norm_vec(v: np.ndarray) -> np.ndarray:
+    """RMS-normalize one ``[D]`` token vector (fixed-shape reduction)."""
+    ms = np.dot(v, v) / np.float32(len(v))
+    return v / np.sqrt(ms + np.float32(1e-6))
+
+
+def _attend_vec(qv, kh, vh, visible):
+    """One (token, head) attention: ``qv [hd]`` against ``kh/vh [Tc, hd]``
+    under the boolean ``visible [Tc]`` mask.  Masked slots score ``-inf``
+    (``exp`` → exact ``+0.0``); ``Tc`` is the sequence's fixed page
+    reservation, so every execution reduces over the same shape."""
+    s = kh @ qv * np.float32(1.0 / math.sqrt(len(qv)))
+    s = np.where(visible, s, np.float32(-np.inf))
+    w = np.exp(s - s.max())
+    w = w / np.sum(w)
+    return w @ vh
+
+
+# ---------------------------------------------------------------------------
+# The TP forward pass (shared by prefill and decode)
+# ---------------------------------------------------------------------------
+
+
+def forward_tokens(weights, cfg: TPServeConfig, comm: Communicator, kv,
+                   seq_ids, tokens: np.ndarray, positions: np.ndarray,
+                   queue=None, comm_log: list | None = None) -> np.ndarray:
+    """Run ``tokens [B, T]`` (T=1 for decode, T=prompt length for prefill)
+    through the TP stack, writing each position's K/V into the paged cache
+    at its absolute slot, and return the **local logits shard**
+    ``[P, B, V/P]`` of the last position.
+
+    Activations are replicated across ranks (standard TP); weights, KV
+    pages and partial sums are owned per rank along the fixed chunk grid.
+    The two per-layer partial allreduces are issued nonblockingly through
+    :meth:`~repro.core.communicator.Communicator.iallreduce`; ``comm_log``
+    records ``(op, nbytes, wait_s)`` per drained request, mirroring
+    :attr:`repro.core.scheduler.CommScheduler.wait_trace`."""
+    P = comm.size
+    cfg.validate_world(P)
+    B, T = tokens.shape
+    H, hd, D = cfg.n_heads, cfg.head_dim, cfg.d_model
+    Hl = H // P
+    cpr = cfg.ff_chunks // P  # MLP / vocab chunks per rank
+
+    def waited(stacked_partial, op="allreduce"):
+        req = comm.iallreduce(stacked_partial, algorithm="recursive_doubling")
+        if queue is not None:
+            queue.push(req)
+        t0 = _time.perf_counter()
+        out = req.wait()
+        if comm_log is not None:
+            comm_log.append((req.op, req.nbytes,
+                             _time.perf_counter() - t0))
+        return out[0]  # rank slices are bit-identical (commutative tree)
+
+    x = (weights["embed"][tokens] + weights["pos"][positions])  # [B, T, D]
+
+    for li, lw in enumerate(weights["layers"]):
+        # -- qkv projections + cache write (per-token, per-head gemv) ------
+        q = np.zeros((B, T, H, hd), np.float32)
+        for b in range(B):
+            for j in range(T):
+                hv = _norm_vec(x[b, j])
+                page, off = kv.slot(seq_ids[b], int(positions[b, j]))
+                for h in range(H):
+                    q[b, j, h] = hv @ lw["wq"][h]
+                    kv.k_pool[li, h // Hl, page, off, h % Hl] = hv @ lw["wk"][h]
+                    kv.v_pool[li, h // Hl, page, off, h % Hl] = hv @ lw["wv"][h]
+        # -- attention + row-parallel output projection --------------------
+        partial = np.zeros((P, B, T, D), np.float32)
+        for b in range(B):
+            gk, gv = kv.gather(seq_ids[b], layer=li)  # [P, Tc, Hl, hd]
+            Tc = gk.shape[1]
+            slots = np.arange(Tc)
+            for j in range(T):
+                visible = slots <= int(positions[b, j])
+                outs = []
+                for h in range(H):
+                    kh = np.ascontiguousarray(gk[h // Hl, :, h % Hl])
+                    vh = np.ascontiguousarray(gv[h // Hl, :, h % Hl])
+                    a = _attend_vec(q[b, j, h], kh, vh, visible)
+                    outs.append(a @ lw["wo"][h])
+                for r in range(P):
+                    partial[r, b, j] = tree_sum(outs[r * Hl:(r + 1) * Hl])
+        x = x + waited(partial)
+        # -- MLP: column-parallel up, row-parallel down over ff_chunks -----
+        partial = np.zeros((P, B, T, D), np.float32)
+        for b in range(B):
+            for j in range(T):
+                hv = _norm_vec(x[b, j])
+                downs = [np.maximum(hv @ lw["w_up"][c], np.float32(0.0))
+                         @ lw["w_down"][c] for c in range(cfg.ff_chunks)]
+                for r in range(P):
+                    partial[r, b, j] = tree_sum(downs[r * cpr:(r + 1) * cpr])
+        x = x + waited(partial)
+
+    # -- vocab-sharded logits head (column-parallel: no reduction) ---------
+    Vl = cfg.vocab_size // P
+    Vc = cfg.vocab_size // cfg.ff_chunks
+    shard = np.zeros((P, B, Vl), np.float32)
+    for b in range(B):
+        hv = _norm_vec(x[b, -1])
+        for c in range(cfg.ff_chunks):
+            r, k = divmod(c, cpr)
+            shard[r, b, k * Vc:(k + 1) * Vc] = hv @ weights["head"][c]
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# Token emission: gather the logits shards, or ship only local argmaxes
+# ---------------------------------------------------------------------------
+
+
+def gather_logits(comm: Communicator, shard: np.ndarray,
+                  queue=None) -> Request:
+    """Issue the allgather of logits shards nonblockingly.  The finalized
+    result is the full ``[P, B, V]`` distribution in natural vocab order."""
+    P, B, Vl = shard.shape
+
+    def rebuild(flat):
+        if P == 1:
+            return shard
+        g = flat.reshape(P, P, B, Vl)  # [holder, contributor, B, Vl]
+        return np.moveaxis(g, 1, 2).reshape(P, B, P * Vl)
+
+    from ..core import requests as R
+
+    req = R.iallgather(shard, comm, algorithm="auto", finalize=rebuild)
+    if queue is not None:
+        queue.push(req)
+    return req
+
+
+def local_argmax(comm: Communicator, shard: np.ndarray,
+                 queue=None) -> Request:
+    """The cheap-message alternative to :func:`gather_logits`: each rank
+    reduces its shard to ``(max, argmax)`` and only those ``[2]``-vectors
+    cross the wire — 8 bytes per sequence per rank instead of
+    ``V/P · itemsize``.  The finalize recovers exactly the argmax of the
+    full distribution (max/argmax do no arithmetic; first-max-wins matches
+    ``np.argmax`` tie-breaking because shards are in vocab order)."""
+    P, B, Vl = shard.shape
+    packed = np.stack([shard.max(axis=-1),
+                       shard.argmax(axis=-1).astype(np.float32)],
+                      axis=-1).reshape(P, B * 2)
+
+    def rebuild(flat):
+        g = (packed.reshape(1, 1, B, 2) if P == 1
+             else flat.reshape(P, P, B, 2))
+        maxes = np.moveaxis(g[..., 0], 1, 2)  # [P, B, contributor]
+        args = np.moveaxis(g[..., 1], 1, 2)
+        win = np.argmax(maxes, axis=-1)  # first max wins (vocab order)
+        picked = np.take_along_axis(args, win[..., None], axis=-1)[..., 0]
+        return (win * Vl + picked).astype(np.int64)  # [P, B]
+
+    from ..core import requests as R
+
+    req = R.iallgather(packed, comm, algorithm="auto", finalize=rebuild)
+    if queue is not None:
+        queue.push(req)
+    return req
+
+
+def prefill_logits(weights, cfg: TPServeConfig, comm: Communicator,
+                   tokens: np.ndarray, kv=None, seq_id: int = 0,
+                   page_size: int = 8, queue=None, comm_log=None):
+    """Single-sequence prefill convenience (doctests, benchmarks): builds a
+    throwaway cache when none is given, runs :func:`forward_tokens` over
+    the whole prompt, and returns the gathered ``[P, B, V]`` logits."""
+    from .kv_cache import PagedKVCache, pages_needed
+
+    P = comm.size
+    B, T = tokens.shape
+    if kv is None:
+        kv = PagedKVCache(cfg.n_layers, n_pages=pages_needed(T, page_size),
+                          page_size=page_size,
+                          heads_local=cfg.n_heads // P,
+                          head_dim=cfg.head_dim, world=P)
+        kv.alloc(seq_id, capacity=T)
+    shard = forward_tokens(weights, cfg, comm, kv, [seq_id] * B, tokens,
+                           np.broadcast_to(np.arange(T), (B, T)),
+                           queue=queue, comm_log=comm_log)
+    return gather_logits(comm, shard, queue).wait()

@@ -11,19 +11,22 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "tools"))
 
 import check_docs  # noqa: E402
+import gen_api_docs  # noqa: E402
 
 
 def test_docs_index_exists_and_cross_links():
     docs = {os.path.basename(p) for p in check_docs.doc_files()}
     assert "README.md" in docs  # docs/README.md index
     assert {"architecture.md", "channel-selection.md", "nonblocking.md",
-            "elasticity.md"} <= docs
+            "elasticity.md", "serving.md"} <= docs
     index = open(os.path.join(ROOT, "docs", "README.md")).read()
     for name in ("architecture.md", "channel-selection.md",
-                 "nonblocking.md", "elasticity.md"):
+                 "nonblocking.md", "elasticity.md", "serving.md"):
         assert name in index, f"docs/README.md does not index {name}"
-    # the top-level README links the index
-    assert "docs/README.md" in open(os.path.join(ROOT, "README.md")).read()
+    # the top-level README links the index and the serving doc
+    readme = open(os.path.join(ROOT, "README.md")).read()
+    assert "docs/README.md" in readme
+    assert "docs/serving.md" in readme
 
 
 def test_markdown_links_resolve():
@@ -32,3 +35,10 @@ def test_markdown_links_resolve():
 
 def test_module_doctests_pass():
     assert check_docs.run_doctests() == []
+
+
+def test_api_reference_pages_are_fresh():
+    """docs/api mirrors the live docstrings — regenerate with
+    ``PYTHONPATH=src python tools/gen_api_docs.py`` after editing any
+    public docstring in core/ or serving/."""
+    assert gen_api_docs.stale_pages() == []

@@ -1,0 +1,300 @@
+"""Serving runtime: continuous batching, sharded KV cache, TP bit-exactness,
+and kill-rank-mid-decode recovery.
+
+Covers the PR-5 acceptance surface:
+
+* paged KV cache admit/evict invariants (page-reservation admission, no
+  mid-decode preemption, pool accounting returns to empty);
+* **bit-exact TP decode**: the engine at any pow2 world produces logits
+  and tokens bitwise identical to the single-rank reference, and a
+  sequence's output is independent of which other requests share its
+  batch (continuous batching cannot perturb results);
+* ``local-argmax`` token emission (8-byte messages) emits exactly the
+  ``gather`` tokens;
+* **kill-rank mid-decode**: the elastic heal (quiesce → regroup → replay
+  from the KV-page manifest) converges on exactly the unfailed run's
+  outputs, with no leaked pages, trace slots, or broker keys;
+* ``selector.serve_plan``: decode prices latency-bound, prefill
+  bandwidth-bound, dollars per token surface per regime.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import channels
+from repro.core.communicator import Communicator
+from repro.core.selector import explain_serve_plan, serve_plan
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.kv_cache import KVPageManifest, OutOfPages, PagedKVCache
+from repro.serving.tp_lm import (
+    TPServeConfig,
+    init_params,
+    prefill_logits,
+    split_weights,
+)
+
+CFG = TPServeConfig(vocab_size=64, d_model=32, n_heads=4, head_dim=8,
+                    d_ff=64, n_layers=2, max_len=32, ff_chunks=4)
+PROMPTS = [[5, 9, 2], [7, 1], [3, 3, 3, 3], [11]]
+
+
+def _engine(**kw):
+    kw.setdefault("world", 2)
+    kw.setdefault("max_slots", 3)
+    kw.setdefault("kv_pages", 16)
+    kw.setdefault("page_size", 4)
+    kw.setdefault("seed", 1)
+    return ContinuousBatchingEngine(CFG, **kw)
+
+
+def _serve(world, prompts=PROMPTS, max_new=6, kill=None, **kw):
+    """Run to completion; returns (outputs, engine facts)."""
+    with _engine(world=world, **kw) as eng:
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
+        heals, n = 0, 0
+        while not eng.done and n < 200:
+            if kill is not None and n == kill[1]:
+                eng.transport.kill(kill[0], after_rounds=3)
+            _, healed = eng.step_or_heal()
+            heals += healed
+            n += 1
+        assert eng.done
+        facts = dict(world=eng.world, heals=heals,
+                     pending=eng.transport.trace.pending,
+                     pages=eng.kv.pages_in_use, queue=len(eng.queue),
+                     generation=eng.comm.generation,
+                     history=list(eng.controller.history))
+        return {k: v.tolist() for k, v in eng.finished.items()}, facts
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache invariants
+# ---------------------------------------------------------------------------
+
+
+def test_kv_page_reservation_and_accounting():
+    kv = PagedKVCache(layers=1, n_pages=6, page_size=4, heads_local=2,
+                      head_dim=4, world=1)
+    assert kv.pages_for(1) == 1 and kv.pages_for(9) == 3
+    a = kv.alloc(0, capacity=9)   # 3 pages
+    b = kv.alloc(1, capacity=4)   # 1 page
+    assert len(a) == 3 and len(b) == 1
+    assert kv.pages_in_use == 4 and kv.free_pages == 2
+    with pytest.raises(OutOfPages):
+        kv.alloc(2, capacity=12)  # needs 3, only 2 free
+    with pytest.raises(ValueError):
+        kv.alloc(0, capacity=4)   # double alloc
+    assert kv.free(0) == 3
+    assert kv.pages_in_use == 1 and kv.peak_in_use == 4
+    assert kv.allocs == 2 and kv.frees == 1
+    assert kv.live_seqs == (1,)
+
+
+def test_kv_append_gather_pads_to_reservation():
+    kv = PagedKVCache(layers=2, n_pages=4, page_size=4, heads_local=2,
+                      head_dim=4, world=2)
+    kv.alloc(7, capacity=6)  # 2 pages -> gather pads to 8 slots
+    k = np.random.default_rng(0).normal(size=(2, 2, 3, 2, 4)).astype(np.float32)
+    kv.append(7, k, k)
+    gk, gv = kv.gather(7)
+    assert gk.shape == (2, 2, 8, 2, 4)
+    assert np.array_equal(gk[:, :, :3], k)
+    assert not gk[:, :, 3:].any()  # beyond length: exact zeros
+    assert kv.length(7) == 3 and kv.padded_len(7) == 8
+    assert kv.manifest_entry(7) == {"pages": (0, 1), "length": 3,
+                                    "capacity": 6}
+    with pytest.raises(ValueError):
+        kv.append(7, np.zeros((2, 2, 4, 2, 4), np.float32),
+                  np.zeros((2, 2, 4, 2, 4), np.float32))  # past capacity
+    assert kv.advance(7, 1) == 4  # engine-style commit
+
+
+def test_engine_admit_evict_invariants():
+    with _engine(world=1, max_slots=2, kv_pages=4, page_size=4) as eng:
+        sids = [eng.submit(p, max_new=4) for p in PROMPTS]
+        seen_active = []
+        while not eng.done:
+            eng.step()
+            assert len(eng.active) <= 2  # slot cap
+            # pages in use == sum of live reservations
+            expect = sum(eng.kv.pages_for(len(eng._states[s].prompt) + 4)
+                         for s in eng.active)
+            assert eng.kv.pages_in_use == expect
+            seen_active.append(set(eng.active))
+        # every request was served despite the pool fitting only ~2 at once
+        assert sorted(eng.finished) == sids
+        assert all(len(v) == 4 for v in eng.finished.values())
+        assert eng.kv.pages_in_use == 0 and eng.kv.allocs == eng.kv.frees == 4
+        assert eng.transport.trace.pending == 0 and len(eng.queue) == 0
+        # continuous: slots refill as sequences finish (not wave-batched)
+        assert any(len(s) == 2 for s in seen_active)
+
+
+def test_engine_submit_validation():
+    with _engine(kv_pages=2, page_size=4) as eng:
+        with pytest.raises(ValueError):
+            eng.submit([], max_new=4)
+        with pytest.raises(ValueError):
+            eng.submit([1], max_new=CFG.max_len)  # exceeds max_len
+        with pytest.raises(ValueError):
+            eng.submit([1, 2, 3], max_new=9)  # 3 pages > 2-page pool
+
+
+def test_engine_close_unregisters_channel():
+    eng = _engine()
+    name = eng.channel
+    assert name in channels.names()
+    # private registration: resolvable by name, never enumerated into
+    # unrelated algorithm='auto' selections
+    assert name not in channels.default_channels()
+    eng.close()
+    assert name not in channels.names()
+    eng.close()  # idempotent
+
+
+def test_engine_failed_init_does_not_leak_channel():
+    before = channels.names()
+    with pytest.raises(ValueError):
+        _engine(kv_pages=0)  # PagedKVCache rejects an empty pool
+    assert channels.names() == before
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact tensor parallelism (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_prefill_logits_bitexact_vs_single_rank():
+    weights = split_weights(init_params(CFG, seed=0), CFG)
+    toks = np.array([[5, 9, 2, 17, 30]])
+    ref = prefill_logits(weights, CFG,
+                         Communicator(axes=("data",), sizes=(1,),
+                                      channel="sim"), toks)
+    for P in (2, 4):
+        comm = Communicator(axes=("data",), sizes=(P,), channel="sim")
+        got = prefill_logits(weights, CFG, comm, toks)
+        assert np.array_equal(ref[0], got[0]), f"P={P} logits diverged"
+        # every rank holds the same gathered distribution, bit for bit
+        for r in range(1, P):
+            assert np.array_equal(got[0], got[r])
+
+
+def test_tp_decode_tokens_bitexact_vs_single_rank():
+    ref, _ = _serve(world=1)
+    for P in (2, 4):
+        got, facts = _serve(world=P)
+        assert got == ref, f"P={P} tokens diverged from single-rank reference"
+        assert facts["pending"] == 0
+
+
+def test_local_argmax_mode_matches_gather():
+    ref, _ = _serve(world=4, logits_mode="gather")
+    got, _ = _serve(world=4, logits_mode="local-argmax")
+    assert got == ref
+
+
+def test_batch_composition_does_not_change_outputs():
+    solo, _ = _serve(world=2, prompts=[PROMPTS[0]], max_new=5)
+    shared, _ = _serve(world=2, prompts=PROMPTS, max_new=5)
+    assert shared[0] == solo[0]
+
+
+# ---------------------------------------------------------------------------
+# Kill-rank mid-decode: regroup and replay from the KV-page manifest
+# ---------------------------------------------------------------------------
+
+
+def test_kill_rank_mid_decode_regroups_and_replays_bitexact():
+    ref, clean = _serve(world=4)
+    got, facts = _serve(world=4, kill=(3, 2))
+    assert clean["heals"] == 0
+    assert facts["heals"] == 1 and facts["world"] == 2
+    assert got == ref  # the healed run emits exactly the unfailed tokens
+    assert facts["pending"] == 0 and facts["pages"] == 0
+    assert facts["queue"] == 0
+    assert facts["generation"] == 1  # regroup bumped the communicator
+    h = facts["history"][0]
+    assert h["dp"] == 2 and h["survivors"] == 3
+    assert h["step"] >= 1  # at least one live sequence replayed
+
+
+def test_kill_during_first_admission_prefill_loses_no_request():
+    """Failure landing inside an admission prefill (before any decode):
+    the half-admitted request stays queued, the heal replays whatever was
+    already live, and every request is still served with the reference
+    outputs."""
+    ref, _ = _serve(world=4)
+    got, facts = _serve(world=4, kill=(2, 0))
+    assert facts["heals"] == 1 and facts["world"] == 2
+    assert got == ref
+    assert facts["pending"] == 0 and facts["pages"] == 0
+
+
+def test_manifest_captures_live_sequences():
+    with _engine(world=2) as eng:
+        eng.submit([5, 9, 2], max_new=4)
+        eng.submit([7, 1], max_new=4)
+        eng.step()  # admits + prefills both
+        man = eng.manifest()
+        assert isinstance(man, KVPageManifest)
+        assert man.live == (0, 1) and man.world == 2
+        e = man.seqs[0]
+        assert e["tokens"][:3] == [5, 9, 2] and len(e["tokens"]) == 4
+        assert e["n_prompt"] == 3 and e["max_new"] == 4
+        assert e["length"] == 3 and len(e["pages"]) == 2  # ceil(7/4)
+
+
+# ---------------------------------------------------------------------------
+# serve_plan: the two regimes priced
+# ---------------------------------------------------------------------------
+
+
+def test_serve_plan_regimes_split_latency_vs_bandwidth():
+    plan = serve_plan(d_model=4096, n_layers=32, vocab_size=128256, P=8,
+                      batch=4, prompt_len=2048, channels=("ici",))
+    assert plan.decode.allreduce.algorithm == "recursive_doubling"
+    assert plan.decode.allreduce.depth == 1
+    assert plan.prefill.allreduce.algorithm in ("ring", "rabenseifner")
+    assert plan.prefill.allreduce.depth > 1  # chunk pipelining pays off
+    assert plan.prefill.nbytes_allreduce == 2048 * plan.decode.nbytes_allreduce
+    # economics: prefill amortizes over batch*prompt tokens
+    assert plan.decode.usd_per_mtok > plan.prefill.usd_per_mtok > 0
+    assert plan.decode.step_s == pytest.approx(
+        plan.decode.compute_s + plan.decode.comm_s)
+    # single rank: no communication term
+    solo = serve_plan(4096, 32, 128256, P=1, batch=4, prompt_len=2048,
+                      channels=("ici",))
+    assert solo.decode.comm_s == 0.0 and solo.decode.allreduce is None
+
+
+def test_serve_plan_local_argmax_shrinks_emission_payload():
+    kw = dict(d_model=1024, n_layers=8, vocab_size=32000, P=8, batch=4,
+              prompt_len=128, channels=("ici",))
+    full = serve_plan(**kw)
+    cheap = serve_plan(logits_mode="local-argmax", **kw)
+    assert cheap.decode.nbytes_allgather < full.decode.nbytes_allgather
+    assert cheap.decode.comm_s < full.decode.comm_s
+
+
+def test_explain_serve_plan_prints_both_regimes():
+    table = explain_serve_plan(2048, 28, 151936, P=8, batch=16,
+                               prompt_len=1024, channels=("ici",))
+    assert "prefill" in table and "decode" in table
+    assert "allreduce" in table and "allgather" in table
+    assert "/1M tokens" in table
+
+
+def test_communicator_serve_plan_thread_through():
+    comm = Communicator(axes=("data",), sizes=(8,), channel="ici")
+    plan = comm.serve_plan(d_model=2048, n_layers=28, vocab_size=151936,
+                           batch=16, prompt_len=1024)
+    assert plan.P == 8
+    assert plan.decode.allreduce.channel == "ici"
+
+
+def test_engine_serve_plan_uses_engine_channel():
+    with _engine(world=2) as eng:
+        plan = eng.serve_plan(prompt_len=8)
+        assert plan.decode.allreduce.channel == eng.channel
+        assert plan.P == 2 and plan.decode.usd_per_mtok > 0

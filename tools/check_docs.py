@@ -30,14 +30,21 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: Modules whose docstring examples the docs lean on.  Keep in sync with
-#: docs/elasticity.md and docs/nonblocking.md code references.
+#: docs/elasticity.md, docs/nonblocking.md and docs/serving.md code
+#: references.
 DOCTEST_MODULES = (
     "repro.core.requests",
     "repro.core.scheduler",
     "repro.core.algorithms",
+    "repro.core.pricing",
+    "repro.core.compression",
+    "repro.core.selector",
     "repro.runtime.membership",
     "repro.runtime.straggler",
     "repro.runtime.elastic",
+    "repro.serving.kv_cache",
+    "repro.serving.tp_lm",
+    "repro.serving.engine",
 )
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -47,7 +54,7 @@ _FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
 def doc_files() -> list[str]:
     return [os.path.join(ROOT, "README.md")] + sorted(
         glob.glob(os.path.join(ROOT, "docs", "*.md"))
-    )
+    ) + sorted(glob.glob(os.path.join(ROOT, "docs", "api", "*.md")))
 
 
 def check_links() -> list[tuple[str, str]]:
