@@ -1,0 +1,31 @@
+"""Correctness tooling for the FMI collective stack.
+
+Two halves, one invariant set (issue/wait discipline, generation stamping,
+deterministic decode, page/broker hygiene):
+
+* :mod:`repro.analysis.lint` — the **static** comm-lint pass (rules
+  FMI001–FMI006, inline suppressions with required reasons, the
+  ``comm-lint`` CLI / ``tools/comm_lint.py``);
+* :mod:`repro.analysis.sanitizer` — the **runtime** CommSanitizer
+  (``FMI_SANITIZE=1`` / ``Communicator(sanitize=True)``), whose hooks live
+  in the request layer, the transports, the scheduler, the KV cache and
+  the serving engine.
+
+Both import nothing from the rest of the package, so they can be loaded in
+any context (CI lint job, a sanitized production launch, a test scope).
+See ``docs/analysis.md`` for the rule catalog and the sanitizer guide.
+"""
+
+from . import lint, sanitizer  # noqa: F401
+from .lint import RULES, Finding, Rule, lint_paths, lint_source  # noqa: F401
+from .sanitizer import (  # noqa: F401
+    CommSanitizer,
+    Diagnostic,
+    SanitizerError,
+    SanitizerReport,
+    activate,
+    deactivate,
+    ensure_active,
+    get_active,
+    scoped,
+)

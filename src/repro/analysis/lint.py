@@ -1,0 +1,643 @@
+"""Static comm-lint for the FMI collective stack (rules FMI001–FMI006).
+
+The nonblocking request layer, the generation-stamped quiesce protocol and
+the bit-exact TP decode path all rest on conventions the type system cannot
+see: every issued request must reach a ``wait``/``test``/``cancel`` on every
+path, rank-conditional branches must issue identical collective ladders,
+the serving path must stay deterministic.  This module machine-checks those
+conventions with a plain :mod:`ast` pass — no imports of the checked code,
+so it runs anywhere (CI's ``lint`` job calls it via ``tools/comm_lint.py``).
+
+Rule catalog (see ``docs/analysis.md`` for worked diagnostics):
+
+==========  ========  ====================================================
+code        severity  what it flags
+==========  ========  ====================================================
+``FMI001``  error     an ``isend``/``irecv``/``iallreduce``/… result that
+                      is discarded, never completed, completed only on
+                      some conditional paths, or list-collected inside a
+                      loop whose trailing statements can raise before the
+                      post-loop ``waitall`` (no cancelling handler)
+``FMI002``  error     rank-conditional branches (``if rank == …``) whose
+                      collective call sequences differ per branch
+``FMI003``  warning   a blocking collective issued between a scheduler's
+                      first ``submit`` and its ``drain``/``flush``
+``FMI004``  warning   raw transport construction / ``ppermute`` calls
+                      outside ``core/`` (bypassing :class:`Communicator`)
+``FMI005``  warning   nondeterminism in the bit-exact decode path
+                      (``time.time``, ``random``, unseeded ``default_rng``,
+                      set-order iteration over ranks) in ``serving/`` and
+                      ``core/algorithms.py``
+``FMI006``  error     a ``Request(...)`` constructed without a
+                      ``generation=`` stamp (invisible to the elastic
+                      quiesce protocol)
+==========  ========  ====================================================
+
+Suppressions are inline and **must carry a reason**::
+
+    self._box["t"] = SimTransport(world)  # fmi-lint: disable=FMI004 -- engine-owned private channel
+
+A ``disable`` comment applies to its own line and the line below it (so it
+can sit above a long statement).  A reasonless ``disable`` suppresses
+nothing and is itself reported as ``FMI000`` — ``--strict`` therefore
+guarantees zero *unexplained* suppressions.
+
+Exit codes of :func:`main` (and ``tools/comm_lint.py`` / the ``comm-lint``
+console script): ``0`` clean, ``1`` findings (``--strict``: any finding;
+default: only ``error``-severity), ``2`` usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import sys
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One lint rule: stable code, human title, severity, fix hint."""
+
+    code: str
+    title: str
+    severity: str  # "error" | "warning"
+    hint: str
+
+
+RULES: dict[str, Rule] = {r.code: r for r in (
+    Rule("FMI000", "unexplained suppression", "error",
+         "write '# fmi-lint: disable=FMIxxx -- <reason>'; a reasonless "
+         "disable suppresses nothing"),
+    Rule("FMI001", "unwaited request", "error",
+         "complete every issued request on every path: wait()/test() it, "
+         "pass it to waitall(), push it to a RequestQueue, or cancel() it "
+         "in an except/finally cleanup"),
+    Rule("FMI002", "collective-order divergence", "error",
+         "all ranks must issue the same collective sequence; express "
+         "rank-dependent behavior with masks (Transport.where), never by "
+         "branching around collectives"),
+    Rule("FMI003", "blocking collective inside a scheduled region", "warning",
+         "a blocking collective between submit() and drain() serializes "
+         "against the in-flight buckets; use the i-variant and push it to "
+         "the scheduler's queue"),
+    Rule("FMI004", "raw transport bypasses Communicator", "warning",
+         "construct transports through Communicator.transport()/the channel "
+         "registry so selection, tracing and regroup stay model-driven"),
+    Rule("FMI005", "nondeterminism in bit-exact decode path", "warning",
+         "the serving path must replay bit-exactly: use seeded "
+         "default_rng(seed), perf_counter only for telemetry, and "
+         "sorted(...) before iterating rank sets"),
+    Rule("FMI006", "generation-unstamped request construction", "error",
+         "pass generation=comm.generation so RequestQueue.cancel_all() can "
+         "quiesce the request on a membership change"),
+)}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic: where, which rule, and the specific message."""
+
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def rule(self) -> Rule:
+        return RULES[self.code]
+
+    @property
+    def severity(self) -> str:
+        return self.rule.severity
+
+    def format(self, hints: bool = True) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: {self.code} " \
+            f"{self.severity}: {self.message}"
+        if hints:
+            s += f"\n    hint: {self.rule.hint}"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*fmi-lint:\s*disable=([A-Za-z0-9_,\s]+?)\s*(?:--\s*(\S.*?))?\s*$")
+
+
+def parse_suppressions(text: str) -> dict[int, tuple[frozenset, str | None]]:
+    """``{line: (codes, reason-or-None)}`` for every ``fmi-lint: disable``
+    comment (1-indexed lines, matching :attr:`Finding.line`)."""
+    out: dict[int, tuple[frozenset, str | None]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            codes = frozenset(c.strip().upper() for c in m.group(1).split(",")
+                              if c.strip())
+            out[i] = (codes, m.group(2))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+#: Calls returning a request-like handle the caller must complete.
+ISSUE_FUNCS = frozenset({
+    "isend", "irecv", "iallreduce", "ireduce_scatter", "iallgather",
+    "ppermute_start",
+})
+#: Transport-level issues get only the discard/never-used clauses of FMI001
+#: (algorithm kernels wait them in structured patterns the conditional
+#: analysis would misread).
+_TRANSPORT_ISSUES = frozenset({"ppermute_start"})
+
+_BARE_COLLECTIVES = frozenset({
+    "allreduce", "reduce_scatter", "allgather", "alltoall", "bcast",
+    "barrier", "iallreduce", "ireduce_scatter", "iallgather",
+})
+#: Only matched in attribute position (``comm.reduce``): the bare names
+#: collide with builtins/functools.
+_ATTR_ONLY_COLLECTIVES = frozenset({"reduce", "scan"})
+_BLOCKING_COLLECTIVES = frozenset({
+    "allreduce", "reduce_scatter", "allgather", "alltoall", "bcast",
+    "reduce", "scan", "barrier",
+})
+#: Attribute roots that are never our communicator (``jax.lax.scan`` etc.).
+_SAFE_ROOTS = frozenset({
+    "jax", "lax", "jnp", "np", "numpy", "functools", "itertools", "math",
+    "os", "re", "ast", "operator", "urllib",
+})
+
+_TRANSPORT_CLASSES = frozenset({
+    "SimTransport", "HostTransport", "JaxTransport", "HostBroker",
+})
+
+
+def _call_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name):
+        return f.id
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    return None
+
+
+def _root_name(node: ast.AST) -> str | None:
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        else:
+            break
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _dotted(node: ast.AST) -> str | None:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions(node: ast.AST, name: str) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name) and n.id == name:
+            return True
+        if isinstance(n, ast.Attribute) and n.attr == name:
+            return True
+    return False
+
+
+class _Parents:
+    """Child → parent map plus ancestor iteration for one module tree."""
+
+    def __init__(self, tree: ast.AST):
+        self._up: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self._up[child] = node
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        return self._up.get(node)
+
+    def ancestors(self, node: ast.AST):
+        node = self._up.get(node)
+        while node is not None:
+            yield node
+            node = self._up.get(node)
+
+    def contains(self, outer: ast.AST, inner: ast.AST) -> bool:
+        return outer is inner or any(a is outer for a in self.ancestors(inner))
+
+    def function_of(self, node: ast.AST) -> ast.AST:
+        for a in self.ancestors(node):
+            if isinstance(a, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Module)):
+                return a
+        return node
+
+
+def _collective_op(call: ast.Call) -> str | None:
+    """The collective's op name when ``call`` looks like one of ours."""
+    name = _call_name(call)
+    f = call.func
+    if isinstance(f, ast.Name):
+        return name if name in _BARE_COLLECTIVES else None
+    if isinstance(f, ast.Attribute) and (
+            name in _BARE_COLLECTIVES or name in _ATTR_ONLY_COLLECTIVES):
+        if _root_name(f.value) in _SAFE_ROOTS:
+            return None
+        return name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+
+
+def _check_fmi001(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = _call_name(call)
+        if name not in ISSUE_FUNCS:
+            continue
+        parent = par.parent(call)
+
+        # (a) statement-expression: the request is discarded outright
+        if isinstance(parent, ast.Expr):
+            out.append(Finding("FMI001", rel, call.lineno, call.col_offset,
+                               f"result of {name}() is discarded — the "
+                               "request is never completed"))
+            continue
+
+        # (b)/(c): bound to a simple name
+        if (isinstance(parent, ast.Assign) and parent.value is call
+                and len(parent.targets) == 1
+                and isinstance(parent.targets[0], ast.Name)):
+            var = parent.targets[0].id
+            if var == "_":
+                out.append(Finding("FMI001", rel, call.lineno,
+                                   call.col_offset,
+                                   f"result of {name}() is assigned to '_' "
+                                   "and never completed"))
+                continue
+            func = par.function_of(parent)
+            uses = [
+                n for n in ast.walk(func)
+                if isinstance(n, ast.Name) and n.id == var
+                and isinstance(n.ctx, ast.Load)
+                and (n.lineno, n.col_offset) > (call.lineno, call.col_offset)
+            ]
+            if not uses:
+                out.append(Finding("FMI001", rel, call.lineno,
+                                   call.col_offset,
+                                   f"request '{var}' from {name}() is never "
+                                   "waited, tested or cancelled"))
+                continue
+            if name in _TRANSPORT_ISSUES:
+                continue
+            # (c) every use sits under an if that postdates the issue, whose
+            # test does not guard on the request itself, and no use lies on
+            # an exception path — completion is unreachable on the else path
+            def _conditional_only(use) -> bool:
+                for a in par.ancestors(use):
+                    if isinstance(a, (ast.ExceptHandler,)):
+                        return False  # cleanup path: counts as completion
+                cond_ifs = [
+                    a for a in par.ancestors(use)
+                    if isinstance(a, ast.If) and not par.contains(a, parent)
+                    and par.contains(func, a)
+                ]
+                if not cond_ifs:
+                    return False
+                return all(not _mentions(a.test, var) for a in cond_ifs)
+
+            if all(_conditional_only(u) for u in uses):
+                out.append(Finding("FMI001", rel, call.lineno,
+                                   call.col_offset,
+                                   f"request '{var}' from {name}() is only "
+                                   "completed under a condition — some "
+                                   "paths leak it"))
+            continue
+
+        # (d) list-collected inside a loop with trailing fallible work and
+        # no cancelling exception handler around the loop
+        if (name not in _TRANSPORT_ISSUES
+                and isinstance(parent, ast.Call)
+                and isinstance(parent.func, ast.Attribute)
+                and parent.func.attr == "append" and call in parent.args):
+            lst = parent.func.value
+            lst_name = lst.id if isinstance(lst, ast.Name) else (
+                lst.attr if isinstance(lst, ast.Attribute) else None)
+            if lst_name is None:
+                continue
+            chain = [call] + list(par.ancestors(call))
+            loop = next((n for n in chain
+                         if isinstance(n, (ast.For, ast.While))), None)
+            if loop is None:
+                continue
+            stmt = chain[chain.index(loop) - 1]
+            if stmt not in loop.body:
+                continue
+            trailing = loop.body[loop.body.index(stmt) + 1:]
+            if not trailing:
+                continue
+            guarded = any(
+                isinstance(a, ast.Try) and any(
+                    _mentions(h, lst_name)
+                    for h in (*a.handlers, *a.finalbody))
+                for a in par.ancestors(loop)
+            )
+            if not guarded:
+                out.append(Finding(
+                    "FMI001", rel, call.lineno, call.col_offset,
+                    f"requests appended to '{lst_name}' inside a loop with "
+                    "trailing statements leak if a later iteration raises "
+                    "before the post-loop waitall (no handler cancels "
+                    f"'{lst_name}')"))
+
+
+def _rankish(test: ast.AST) -> bool:
+    for n in ast.walk(test):
+        if isinstance(n, ast.Name) and "rank" in n.id.lower():
+            return True
+        if isinstance(n, ast.Attribute) and "rank" in n.attr.lower():
+            return True
+    return False
+
+
+def _branch_ops(stmts) -> list[str]:
+    ops = []
+    for s in stmts:
+        for n in ast.walk(s):
+            if isinstance(n, ast.Call):
+                op = _collective_op(n)
+                if op is not None:
+                    ops.append(op)
+    return ops
+
+
+def _check_fmi002(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.If) or not _rankish(node.test):
+            continue
+        body_ops = _branch_ops(node.body)
+        else_ops = _branch_ops(node.orelse)
+        if body_ops != else_ops:
+            out.append(Finding(
+                "FMI002", rel, node.lineno, node.col_offset,
+                "rank-conditional branches issue different collective "
+                f"sequences: if-branch {body_ops or '[]'} vs else-branch "
+                f"{else_ops or '[]'} — non-branching ranks will deadlock "
+                "or mis-match"))
+
+
+def _check_fmi003(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    for func in ast.walk(tree):
+        if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = [n for n in ast.walk(func) if isinstance(n, ast.Call)]
+        submits = [c for c in calls
+                   if isinstance(c.func, ast.Attribute)
+                   and c.func.attr == "submit"]
+        if not submits:
+            continue
+        drains = [c for c in calls
+                  if isinstance(c.func, ast.Attribute)
+                  and c.func.attr in ("drain", "flush")]
+        start = min(c.lineno for c in submits)
+        end = max((c.lineno for c in drains),
+                  default=getattr(func, "end_lineno", 1 << 30))
+        for c in calls:
+            op = _collective_op(c)
+            if op in _BLOCKING_COLLECTIVES and start < c.lineno <= end:
+                out.append(Finding(
+                    "FMI003", rel, c.lineno, c.col_offset,
+                    f"blocking {op}() between submit() (line {start}) and "
+                    f"drain/flush (line {end}) serializes against the "
+                    "in-flight buckets"))
+
+
+def _check_fmi004(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    if rel.startswith(("core/", "analysis/")):
+        return
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call):
+            continue
+        name = _call_name(call)
+        if name in _TRANSPORT_CLASSES:
+            out.append(Finding(
+                "FMI004", rel, call.lineno, call.col_offset,
+                f"raw {name}(...) constructed outside core/ — bypasses the "
+                "channel registry and Communicator.transport()"))
+        elif (name in ("ppermute", "ppermute_start")
+              and isinstance(call.func, ast.Attribute)):
+            out.append(Finding(
+                "FMI004", rel, call.lineno, call.col_offset,
+                f"raw transport .{name}() outside core/ — use the "
+                "collective/request API on a Communicator"))
+
+
+_NONDET_TIME = frozenset({"time", "time_ns"})
+_NONDET_DT = frozenset({"now", "utcnow", "today"})
+_NONDET_NP_OK = frozenset({"default_rng"})
+
+
+def _check_fmi005(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    if not (rel.startswith("serving/") or rel == "core/algorithms.py"):
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _call_name(node)
+            dotted = _dotted(node.func) or ""
+            root = _root_name(node.func)
+            if name in _NONDET_TIME and root in ("time", "_time"):
+                out.append(Finding(
+                    "FMI005", rel, node.lineno, node.col_offset,
+                    f"{dotted}() is wall-clock-dependent — the decode path "
+                    "must replay bit-exactly"))
+            elif name in _NONDET_DT and "datetime" in dotted:
+                out.append(Finding(
+                    "FMI005", rel, node.lineno, node.col_offset,
+                    f"{dotted}() is wall-clock-dependent in the decode "
+                    "path"))
+            elif root == "random" and dotted.startswith("random."):
+                out.append(Finding(
+                    "FMI005", rel, node.lineno, node.col_offset,
+                    f"{dotted}() draws from global random state — "
+                    "unseeded nondeterminism in the decode path"))
+            elif (dotted.startswith(("np.random.", "numpy.random."))
+                  and name not in _NONDET_NP_OK):
+                out.append(Finding(
+                    "FMI005", rel, node.lineno, node.col_offset,
+                    f"{dotted}() uses numpy's global RNG — pass a seeded "
+                    "default_rng(seed) instead"))
+            elif name == "default_rng" and not node.args and not node.keywords:
+                out.append(Finding(
+                    "FMI005", rel, node.lineno, node.col_offset,
+                    "default_rng() without a seed is entropy-seeded — "
+                    "nondeterministic in the decode path"))
+        elif isinstance(node, ast.For):
+            it = node.iter
+            if isinstance(it, ast.Call):
+                iname = _call_name(it)
+                idotted = _dotted(it.func) or ""
+                if (iname in ("set", "frozenset")
+                        and isinstance(it.func, ast.Name)) or \
+                        idotted.endswith("membership.group"):
+                    out.append(Finding(
+                        "FMI005", rel, node.lineno, node.col_offset,
+                        "iterating an unordered rank set — set order is "
+                        "hash-dependent; wrap in sorted(...)"))
+
+
+def _check_fmi006(tree, par: _Parents, rel: str, out: list[Finding]) -> None:
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call) or _call_name(call) != "Request":
+            continue
+        if (isinstance(call.func, ast.Attribute)
+                and _root_name(call.func) in _SAFE_ROOTS):
+            continue  # e.g. urllib.request.Request
+        if not any(kw.arg == "generation" for kw in call.keywords):
+            out.append(Finding(
+                "FMI006", rel, call.lineno, call.col_offset,
+                "Request(...) constructed without generation= — the elastic "
+                "quiesce (RequestQueue.cancel_all) cannot see it"))
+
+
+_CHECKS = (_check_fmi001, _check_fmi002, _check_fmi003, _check_fmi004,
+           _check_fmi005, _check_fmi006)
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def _rel_in_package(path: str) -> str:
+    """Path relative to the ``repro`` package root (``serving/engine.py``),
+    so the scope/allowlist rules are stable however the tree is invoked."""
+    parts = os.path.normpath(os.path.abspath(path)).split(os.sep)
+    if "repro" in parts:
+        idx = len(parts) - 1 - parts[::-1].index("repro")
+        rel = "/".join(parts[idx + 1:])
+        if rel:
+            return rel
+    return os.path.basename(path)
+
+
+def lint_source(text: str, relpath: str = "<string>",
+                display_path: str | None = None
+                ) -> tuple[list[Finding], int]:
+    """Lint one module's source.  Returns ``(findings, n_suppressed)``;
+    reasonless suppressions surface as ``FMI000`` findings."""
+    display = display_path if display_path is not None else relpath
+    tree = ast.parse(text)
+    par = _Parents(tree)
+    raw: list[Finding] = []
+    for check in _CHECKS:
+        check(tree, par, relpath, raw)
+    for f in raw:
+        object.__setattr__(f, "path", display)
+
+    supp = parse_suppressions(text)
+    findings: list[Finding] = []
+    suppressed = 0
+    for f in sorted(raw, key=lambda f: (f.line, f.col, f.code)):
+        hit = None
+        for line in (f.line, f.line - 1):
+            entry = supp.get(line)
+            if entry and f.code in entry[0]:
+                hit = entry
+                break
+        if hit is not None and hit[1]:
+            suppressed += 1
+        else:
+            findings.append(f)
+    for line, (codes, reason) in sorted(supp.items()):
+        if not reason:
+            findings.append(Finding(
+                "FMI000", display, line, 0,
+                f"suppression of {', '.join(sorted(codes))} has no reason "
+                "(and is ignored)"))
+    return findings, suppressed
+
+
+def iter_py_files(paths) -> list[str]:
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if d not in ("__pycache__", ".git"))
+                files += [os.path.join(root, n) for n in sorted(names)
+                          if n.endswith(".py")]
+        else:
+            files.append(p)
+    return files
+
+
+def lint_paths(paths) -> tuple[list[Finding], int, int]:
+    """Lint every ``.py`` under ``paths``.  Returns
+    ``(findings, files_checked, suppressed)``."""
+    findings: list[Finding] = []
+    suppressed = 0
+    files = iter_py_files(paths)
+    for path in files:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        got, n = lint_source(text, _rel_in_package(path), display_path=path)
+        findings += got
+        suppressed += n
+    return findings, len(files), suppressed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="comm-lint",
+        description="Static comm-lint for the FMI collective stack "
+                    "(FMI001-FMI006; see docs/analysis.md).")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding (default: errors only)")
+    ap.add_argument("--no-hints", action="store_true",
+                    help="omit fix hints from the output")
+    args = ap.parse_args(argv)
+
+    for p in args.paths:
+        if not os.path.exists(p):
+            print(f"comm-lint: no such path: {p}", file=sys.stderr)
+            return 2
+    try:
+        findings, n_files, suppressed = lint_paths(args.paths)
+    except SyntaxError as e:
+        print(f"comm-lint: cannot parse {e.filename}:{e.lineno}: {e.msg}",
+              file=sys.stderr)
+        return 2
+
+    for f in findings:
+        print(f.format(hints=not args.no_hints))
+    errors = sum(1 for f in findings if f.severity == "error")
+    warnings = len(findings) - errors
+    print(f"comm-lint: {n_files} file(s), {errors} error(s), "
+          f"{warnings} warning(s), {suppressed} suppressed")
+    if findings and (args.strict or errors):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -28,6 +28,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..analysis.sanitizer import get_active as _sanitizer
 from . import algorithms as A
 from .communicator import Communicator
 from .selector import select
@@ -44,6 +45,16 @@ _XLA_OPS = {
 
 def _nbytes(x) -> int:
     return int(math.prod(x.shape)) * x.dtype.itemsize
+
+
+def _observe(op: str, x, comm: Communicator) -> None:
+    """CommSanitizer hook: append this collective to every rank's op ladder
+    (one call covers all ranks — the software channels are lockstep; see
+    :meth:`repro.analysis.sanitizer.CommSanitizer.on_collective`)."""
+    s = _sanitizer()
+    if s is not None:
+        s.on_collective(f"{comm.name}@{comm.channel}", op,
+                        _nbytes(x) if x is not None else 0, comm.size)
 
 
 def _resolve(
@@ -110,6 +121,7 @@ def allreduce(x, comm: Communicator, op="add", algorithm="auto", objective="time
     """``pipeline``: chunk-streaming depth for the bandwidth-class
     algorithms; None lets the selector pick it from the α-β model (only
     meaningful with ``algorithm='auto'`` or ring/rabenseifner)."""
+    _observe("allreduce", x, comm)
     if comm.size == 1:
         return x
     t = comm.transport()
@@ -134,6 +146,7 @@ def reduce_scatter(x, comm: Communicator, op="add", algorithm="auto",
                    pipeline: int | None = None):
     """Returns this rank's reduced chunk of ``x`` raveled: shape
     ``[ceil(x.size/P)]`` under the natural convention (rank r owns chunk r)."""
+    _observe("reduce_scatter", x, comm)
     if comm.size == 1:
         return x.reshape(-1)
     t = comm.transport()
@@ -165,6 +178,7 @@ def allgather(chunk, comm: Communicator, algorithm="auto"):
     """Natural convention: rank r contributes chunk r; returns flat
     ``[P * chunk.size]`` (leading concat over ranks; on stacked software
     transports the result is ``[P, P * chunk.size]``)."""
+    _observe("allgather", chunk, comm)
     if comm.size == 1:
         return chunk.reshape(-1)
     if algorithm == "auto":
@@ -189,6 +203,7 @@ def alltoall(x, comm: Communicator, algorithm="auto"):
     """``x``: logical ``[P, c, ...]`` per rank (stacked transports:
     physical ``[P, P, c, ...]``); slot j goes to rank j, returns slot j
     from rank j."""
+    _observe("alltoall", x, comm)
     if comm.size == 1:
         return x
     if algorithm == "auto":
@@ -204,6 +219,7 @@ def alltoall(x, comm: Communicator, algorithm="auto"):
 
 
 def bcast(x, comm: Communicator, root=0, algorithm="binomial"):
+    _observe("bcast", x, comm)
     if comm.size == 1:
         return x
     t = comm.transport()
@@ -211,6 +227,7 @@ def bcast(x, comm: Communicator, root=0, algorithm="binomial"):
 
 
 def reduce(x, comm: Communicator, op="add", root=0, algorithm="binomial"):
+    _observe("reduce", x, comm)
     if comm.size == 1:
         return x
     t = comm.transport()
@@ -219,6 +236,7 @@ def reduce(x, comm: Communicator, op="add", root=0, algorithm="binomial"):
 
 def scan(x, comm: Communicator, op="add"):
     """Inclusive prefix scan across ranks (Hillis–Steele, ⌈log₂P⌉ rounds)."""
+    _observe("scan", x, comm)
     if comm.size == 1:
         return x
     t = comm.transport()
@@ -226,6 +244,13 @@ def scan(x, comm: Communicator, op="add"):
 
 
 def barrier(comm: Communicator):
+    """A barrier is also the sanitizer's synchronization point: every
+    rank's hashed collective ladder is compared here (and reset)."""
+    s = _sanitizer()
+    if s is not None:
+        s.on_collective(f"{comm.name}@{comm.channel}", "barrier", 0,
+                        comm.size)
+        s.barrier_check(f"{comm.name}@{comm.channel}", comm.size)
     if comm.size == 1:
         return jnp.ones((1,), jnp.int32)
     t = comm.transport()

@@ -34,6 +34,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field, replace
 
+from ..analysis.sanitizer import ensure_active as _ensure_sanitizer
+from ..analysis.sanitizer import get_active as _sanitizer
 from .transport import Transport
 
 
@@ -44,10 +46,17 @@ class Communicator:
     channel: str = "ici"
     name: str = "world"
     generation: int = 0  # bumped by regroup(); stamps issued requests
+    #: Activate the process-wide :class:`~repro.analysis.sanitizer.
+    #: CommSanitizer` when this group is built (equivalent to running under
+    #: ``FMI_SANITIZE=1``); excluded from equality so sanitized and plain
+    #: communicators over the same group compare equal.
+    sanitize: bool = field(default=False, compare=False)
 
     def __post_init__(self):
         if len(self.axes) != len(self.sizes):
             raise ValueError("axes/sizes mismatch")
+        if self.sanitize:
+            _ensure_sanitizer()
 
     @property
     def size(self) -> int:
@@ -95,12 +104,16 @@ class Communicator:
         Requests issued through the old object remain stamped with the old
         generation, so ``RequestQueue.cancel_all(old.generation)`` aborts
         exactly the stale in-flight traffic."""
-        return replace(
+        nxt = replace(
             self,
             axes=self.axes if axes is None else tuple(axes),
             sizes=self.sizes if sizes is None else tuple(sizes),
             generation=self.generation + 1,
         )
+        s = _sanitizer()
+        if s is not None:
+            s.on_regroup(f"{nxt.name}@{nxt.channel}", nxt.generation)
+        return nxt
 
     def sub(self, *axes: str) -> "Communicator":
         """Sub-communicator over a subset of this communicator's axes."""
@@ -176,15 +189,17 @@ class Communicator:
     def isend(self, x, transport, pairs, tag=0):
         """Sender half of a tag-matched p2p exchange on ``transport`` (one
         transport instance must be shared by the matching :meth:`irecv` —
-        the mailbox lives on it)."""
+        the mailbox lives on it).  The request is stamped with this
+        communicator's generation."""
         from . import requests as R
 
-        return R.isend(x, transport, pairs, tag=tag)
+        return R.isend(x, transport, pairs, tag=tag,
+                       generation=self.generation)
 
     def irecv(self, transport, tag=0):
         from . import requests as R
 
-        return R.irecv(transport, tag=tag)
+        return R.irecv(transport, tag=tag, generation=self.generation)
 
     def scheduler(self, **kwargs):
         """A :class:`~repro.core.scheduler.CommScheduler` bound to this

@@ -50,6 +50,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Sequence
 
+from ..analysis.sanitizer import get_active as _sanitizer
 from .transport import Perm, Transport, TransportRequest
 
 
@@ -108,6 +109,9 @@ class Request:
         if not self._done and transport_req is None and thunk is None:
             # eager result whose finalize must still run at completion time
             self._thunk = lambda: result
+        s = _sanitizer()
+        if s is not None:
+            s.on_request_created(self)
 
     def test(self) -> bool:
         """True iff the operation has completed (never blocks).  A cancelled
@@ -122,6 +126,9 @@ class Request:
         """Block until complete; returns the operation's result.  Idempotent
         — later calls return the same result.  Raises
         :class:`CancelledError` if the request was cancelled."""
+        s = _sanitizer()
+        if s is not None:
+            s.on_wait(self)
         if self.cancelled:
             raise CancelledError(
                 f"{self.op} request (generation {self.generation}) was cancelled"
@@ -139,6 +146,9 @@ class Request:
         any) is cancelled — closing its trace slot and discarding staged
         broker keys — and the thunk/finalize are dropped unrun.  Returns
         True iff this call cancelled it (False: already completed)."""
+        s = _sanitizer()
+        if s is not None:
+            s.on_cancel(self)
         if self._done:
             return False
         if self._treq is not None:
@@ -146,6 +156,9 @@ class Request:
         self._result = self._treq = self._thunk = self._finalize = None
         self._done = True
         self.cancelled = True
+        state = getattr(self, "_fmi_san", None)
+        if state is not None:  # cancellation IS a completion for the tracker
+            state["done"] = True
         return True
 
     def _complete(self, value):
@@ -154,6 +167,9 @@ class Request:
             value = fin(value)
         self._result, self._treq, self._thunk = value, None, None
         self._done = True
+        state = getattr(self, "_fmi_san", None)
+        if state is not None:  # retire the sanitizer's leak tracking
+            state["done"] = True
 
 
 def wait(req: Request):
@@ -248,14 +264,19 @@ class RequestQueue:
 
 def _issue(op: str, nbytes: int, run: Callable[[], Any],
            finalize: Callable[[Any], Any] | None = None,
-           generation: int = 0) -> Request:
+           comm=None) -> Request:
     """All our transports move the bytes at issue time (lockstep software
     channels) or leave scheduling to XLA (mesh channels), so the collective
     executes here and the Request carries the finished value; ``wait`` is
     the synchronization point the caller orders the program around (and
     where ``finalize`` — e.g. bucket unpacking — runs)."""
-    return Request(op, nbytes, result=run(), finalize=finalize,
-                   generation=generation)
+    generation = comm.generation if comm is not None else 0
+    req = Request(op, nbytes, result=run(), finalize=finalize,
+                  generation=generation)
+    s = _sanitizer()
+    if s is not None and comm is not None:
+        s.on_issue(req, f"{comm.name}@{comm.channel}", generation)
+    return req
 
 
 def _payload_bytes(x) -> int:
@@ -276,7 +297,7 @@ def iallreduce(x, comm, op="add", algorithm="auto", objective="time",
     return _issue("allreduce", _payload_bytes(x),
                   lambda: C.allreduce(x, comm, op=op, algorithm=algorithm,
                                       objective=objective, pipeline=pipeline),
-                  finalize=finalize, generation=comm.generation)
+                  finalize=finalize, comm=comm)
 
 
 def ireduce_scatter(x, comm, op="add", algorithm="auto",
@@ -288,7 +309,7 @@ def ireduce_scatter(x, comm, op="add", algorithm="auto",
     return _issue("reduce_scatter", _payload_bytes(x),
                   lambda: C.reduce_scatter(x, comm, op=op, algorithm=algorithm,
                                            pipeline=pipeline),
-                  finalize=finalize, generation=comm.generation)
+                  finalize=finalize, comm=comm)
 
 
 def iallgather(chunk, comm, algorithm="auto",
@@ -298,7 +319,7 @@ def iallgather(chunk, comm, algorithm="auto",
 
     return _issue("allgather", _payload_bytes(chunk),
                   lambda: C.allgather(chunk, comm, algorithm=algorithm),
-                  finalize=finalize, generation=comm.generation)
+                  finalize=finalize, comm=comm)
 
 
 # ---------------------------------------------------------------------------
@@ -316,20 +337,26 @@ def _mailbox(t: Transport) -> dict:
     return box
 
 
-def isend(x, t: Transport, pairs: Perm, tag: Any = 0) -> Request:
+def isend(x, t: Transport, pairs: Perm, tag: Any = 0, *,
+          generation: int = 0) -> Request:
     """Sender half of a nonblocking point-to-point exchange: inject ``x``
     along ``pairs`` on transport ``t``.  The matching :func:`irecv` (same
     transport, same ``tag``) yields the data.  The returned Request's
     ``wait`` is send-completion (buffer reusable) — it does NOT imply the
-    receive finished."""
+    receive finished.  ``generation`` stamps the request for the elastic
+    quiesce protocol (:meth:`Communicator.isend` passes its own)."""
     box = _mailbox(t)
     if tag in box:
         raise ValueError(f"isend tag collision: {tag!r} already in flight")
+    s = _sanitizer()
+    if s is not None:
+        s.on_isend(t, list(pairs), tag)
     box[tag] = t.ppermute_start(x, pairs)
-    return Request("send", _payload_bytes(x), tag, result=None)
+    return Request("send", _payload_bytes(x), tag, result=None,
+                   generation=generation)
 
 
-def irecv(t: Transport, tag: Any = 0) -> Request:
+def irecv(t: Transport, tag: Any = 0, *, generation: int = 0) -> Request:
     """Receiver half: Request completing with the payload a matching
     :func:`isend` injected under ``tag``.  Waiting the receive closes the
     channel's pending slot (the GET hop on mediated transports)."""
@@ -341,7 +368,11 @@ def irecv(t: Transport, tag: Any = 0) -> Request:
             f"irecv with no matching isend for tag {tag!r} (in flight: "
             f"{sorted(map(repr, box))})"
         ) from None
-    return Request("recv", 0, tag, transport_req=treq)
+    s = _sanitizer()
+    if s is not None:
+        s.on_irecv(t, tag)
+    return Request("recv", 0, tag, transport_req=treq,
+                   generation=generation)
 
 
 def abort_mailbox(t: Transport) -> int:
@@ -365,4 +396,7 @@ def abort_mailbox(t: Transport) -> int:
     box = _mailbox(t)
     n = sum(1 for treq in box.values() if treq.cancel())
     box.clear()
+    s = _sanitizer()
+    if s is not None:
+        s.on_mailbox_abort(t, n)
     return n

@@ -43,6 +43,7 @@ import math
 import time as _time
 from typing import Any
 
+from ..analysis.sanitizer import get_active as _sanitizer
 from .communicator import Communicator
 from .requests import Request, RequestQueue, iallreduce
 from .selector import BucketPlan, bucket_plan
@@ -203,6 +204,9 @@ class CommScheduler:
         n = self.queue.cancel_all(generation)
         self._results.clear()
         self._submitted.clear()
+        s = _sanitizer()
+        if s is not None:
+            s.on_scheduler_abort(n)
         return n
 
     def replan(self, slowdown: float) -> BucketPlan | None:

@@ -58,6 +58,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis.sanitizer import get_active as _sanitizer
+
 Perm = Sequence[tuple[int, int]]
 
 
@@ -124,6 +126,10 @@ class TransportRequest:
         """Abort the request if still in flight.  Returns True iff this call
         cancelled it (False: already completed — MPI_Cancel semantics)."""
         if self._done:
+            if self.cancelled:
+                s = _sanitizer()
+                if s is not None:
+                    s.on_transport_double_cancel(self)
             return False
         on_cancel = self._on_cancel
         self._on_wait = self._on_cancel = None
@@ -132,6 +138,9 @@ class TransportRequest:
         self.cancelled = True
         if on_cancel is not None:
             on_cancel()
+        s = _sanitizer()
+        if s is not None:
+            s.on_transport_cancel(self)
         return True
 
 

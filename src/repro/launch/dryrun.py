@@ -471,6 +471,9 @@ def main():
         step_s = mfl / 256 / V5E.peak_flops_bf16  # full fwd+bwd compute
         ckpt_bytes = lm.count_params(cfg) * (2 + 8)  # bf16 params + f32 m/v
         print(f"\n{explain_rescale_plan(nbytes, 16, 15, steps_remaining=1000, compute_s=step_s, channels=('ici',), ckpt_bytes=ckpt_bytes, steps_since_ckpt=25)}")
+        print("\ncheckers: comm-lint FMI001-FMI006 (python tools/comm_lint.py"
+              " src/repro --strict) | CommSanitizer (FMI_SANITIZE=1 or "
+              "--sanitize on train/serve) — see docs/analysis.md")
         return
 
     if args.all or args.grid:

@@ -1,0 +1,49 @@
+"""Shared ``--sanitize`` plumbing for the launchers.
+
+``train.py`` and ``serve.py`` both expose the same two flags::
+
+    --sanitize            # activate the CommSanitizer for this run
+    --sanitize-out PATH   # write the SanitizerReport JSON artifact
+
+Either flag (or ``FMI_SANITIZE=1``) arms the process-global sanitizer
+before any communicator is built; at exit the launcher prints
+:meth:`~repro.analysis.sanitizer.SanitizerReport.format` and, when asked,
+writes :meth:`~repro.analysis.sanitizer.SanitizerReport.to_dict` as JSON —
+the artifact CI or a bisect script can diff across commits.
+"""
+
+from __future__ import annotations
+
+import json
+
+
+def add_sanitize_args(ap) -> None:
+    ap.add_argument("--sanitize", action="store_true",
+                    help="run under the CommSanitizer (runtime race/leak "
+                    "detector; see docs/analysis.md) and print its report")
+    ap.add_argument("--sanitize-out", default="",
+                    help="write the SanitizerReport as JSON to this path "
+                    "(implies --sanitize)")
+
+
+def arm(args):
+    """Activate the sanitizer when requested (flag or env); returns the
+    active instance or None.  Must run before the first communicator."""
+    from ..analysis.sanitizer import ensure_active, get_active
+
+    if getattr(args, "sanitize", False) or getattr(args, "sanitize_out", ""):
+        return ensure_active()
+    return get_active()  # picks up FMI_SANITIZE=1
+
+
+def emit(san, args) -> None:
+    """Print the report and write the JSON artifact (no-op when off)."""
+    if san is None:
+        return
+    rep = san.report()
+    print(rep.format())
+    out = getattr(args, "sanitize_out", "")
+    if out:
+        with open(out, "w") as f:
+            json.dump(rep.to_dict(), f, indent=2)
+        print(f"sanitizer report written to {out}")

@@ -166,7 +166,11 @@ def main():
                     "and exit")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny end-to-end smoke run (CI)")
+    from .sanitize_cli import add_sanitize_args, arm, emit
+
+    add_sanitize_args(ap)
     args = ap.parse_args()
+    san = arm(args)  # before the engine builds its communicator
 
     cfg = configs.get(args.arch)
     if not cfg.supports_decode:
@@ -181,12 +185,14 @@ def main():
         args.max_new = min(args.max_new, 4)
         args.kv_pages = min(args.kv_pages, 16)
         _run_continuous(cfg, args)
+        emit(san, args)
         print("dry-run ok")
         return
     if args.batch_policy == "wave":
         _run_wave(cfg, args)
     else:
         _run_continuous(cfg, args)
+    emit(san, args)
 
 
 if __name__ == "__main__":

@@ -72,7 +72,11 @@ def main():
     ap.add_argument("--kill-rank", type=int, default=None,
                     help="inject: declare this rank dead at --kill-at-step")
     ap.add_argument("--kill-at-step", type=int, default=None)
+    from .sanitize_cli import add_sanitize_args, arm, emit
+
+    add_sanitize_args(ap)
     args = ap.parse_args()
+    san = arm(args)  # before the first communicator is built
 
     cfg = configs.get_reduced(args.arch) if args.reduced else configs.get(args.arch)
     mesh = make_host_mesh(args.data_axis, args.model_axis)
@@ -206,6 +210,7 @@ def main():
     if args.out_json:
         with open(args.out_json, "w") as f:
             json.dump(history, f)
+    emit(san, args)
 
 
 if __name__ == "__main__":

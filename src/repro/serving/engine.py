@@ -52,6 +52,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..analysis.sanitizer import get_active as _sanitizer
 from ..core.communicator import Communicator
 from ..core.requests import RequestQueue
 from ..models import lm
@@ -286,10 +287,34 @@ class ContinuousBatchingEngine:
 
     # -- lifecycle ----------------------------------------------------------
     def close(self) -> None:
-        """Unregister the engine's private channel (idempotent)."""
-        if not self._closed:
-            from ..core import channels as CH
+        """Release engine-owned resources and unregister the private channel
+        (idempotent).  Under :mod:`repro.analysis.sanitizer` this is also the
+        leak checkpoint: requests still pending and KV reservations never
+        released are diagnosed *before* being cleaned up, so an engine
+        abandoned mid-serve shows up in the sanitizer report rather than
+        silently evaporating with its channel."""
+        if self._closed:
+            return
+        from ..core import channels as CH
 
+        where = f"ContinuousBatchingEngine[{self.channel}].close"
+        s = _sanitizer()
+        queue = getattr(self, "queue", None)
+        kv = getattr(self, "kv", None)
+        try:
+            if s is not None:
+                if queue is not None:
+                    s.check_queue(queue, where)
+                if kv is not None:
+                    s.check_kv(kv, where)
+        finally:
+            # abort-path hygiene: drop in-flight requests and return reserved
+            # pages before the channel registration disappears
+            if queue is not None:
+                queue.cancel_all()
+            if kv is not None:
+                for sid in kv.live_seqs:
+                    kv.free(sid)
             CH.unregister(self.channel)
             self._closed = True
 
@@ -313,7 +338,8 @@ class ContinuousBatchingEngine:
         from ..core.transport import SimTransport
 
         self.cfg.validate_world(world)
-        self._box["t"] = SimTransport(world)
+        # fmi-lint: disable=FMI004 -- engine-owned private channel: this raw
+        self._box["t"] = SimTransport(world)  # transport IS the registration
         if self.comm.size != world:
             self.comm = self.comm.regroup(sizes=(world,))
         self.kv = PagedKVCache(
@@ -449,7 +475,7 @@ class ContinuousBatchingEngine:
         # the whole current group — failure detection here is transport
         # evidence (RankFailure), not timers; the heartbeat path matters on
         # real multi-host deployments (paper §3.1)
-        for r in self.membership.group():
+        for r in sorted(self.membership.group()):
             self.membership.heartbeat(r)
         out: list[int] = []
         healed = self.controller.step_or_heal(

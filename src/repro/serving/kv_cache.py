@@ -59,6 +59,8 @@ from typing import Any
 
 import numpy as np
 
+from ..analysis.sanitizer import get_active as _sanitizer
+
 
 class OutOfPages(RuntimeError):
     """Admission failed: the page pool cannot cover the sequence's
@@ -168,6 +170,9 @@ class PagedKVCache:
         self._seqs[seq_id] = _Seq(pages=pages, capacity=int(capacity))
         self.allocs += 1
         self.peak_in_use = max(self.peak_in_use, self.pages_in_use)
+        s = _sanitizer()
+        if s is not None:
+            s.on_kv_alloc(self, seq_id, pages)
         return pages
 
     def free(self, seq_id: int) -> int:
@@ -179,6 +184,9 @@ class PagedKVCache:
             self.v_pool[:, :, p] = 0.0
         self._free.extend(seq.pages)
         self.frees += 1
+        s = _sanitizer()
+        if s is not None:
+            s.on_kv_free(self, seq_id, len(seq.pages))
         return len(seq.pages)
 
     # -- data path ----------------------------------------------------------

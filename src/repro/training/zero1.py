@@ -143,21 +143,30 @@ def zero1_update(grads, state, params, layout: FlatLayout, comm: Communicator,
     # phase 2: sharded AdamW per group, then the allgather of every updated
     # chunk through the request layer, all issued before any is waited on
     new_m, new_v, ag_reqs = [], [], []
-    for gi, (chunk, pf) in enumerate(zip(chunks, p_flats)):
-        r = comm.transport().rank()
-        own = jax.lax.dynamic_slice_in_dim(pf, r * chunk.shape[0], chunk.shape[0])
-        gfl = chunk.astype(jnp.float32)
-        m = b1 * state["m"][gi].astype(jnp.float32) + (1 - b1) * gfl
-        v = b2 * state["v"][gi].astype(jnp.float32) + (1 - b2) * gfl * gfl
-        upd = (m / c1) / (jnp.sqrt(v / c2) + opt_cfg.eps)
-        upd = upd + opt_cfg.weight_decay * own.astype(jnp.float32)
-        own_new = (own.astype(jnp.float32) - lr * upd).astype(pf.dtype)
-        ag_reqs.append(R.iallgather(own_new, comm, algorithm=ag_algorithm))
-        new_m.append(m.astype(state["m"][gi].dtype))
-        new_v.append(v.astype(state["v"][gi].dtype))
+    try:
+        for gi, (chunk, pf) in enumerate(zip(chunks, p_flats)):
+            r = comm.transport().rank()
+            own = jax.lax.dynamic_slice_in_dim(pf, r * chunk.shape[0], chunk.shape[0])
+            gfl = chunk.astype(jnp.float32)
+            m = b1 * state["m"][gi].astype(jnp.float32) + (1 - b1) * gfl
+            v = b2 * state["v"][gi].astype(jnp.float32) + (1 - b2) * gfl * gfl
+            upd = (m / c1) / (jnp.sqrt(v / c2) + opt_cfg.eps)
+            upd = upd + opt_cfg.weight_decay * own.astype(jnp.float32)
+            own_new = (own.astype(jnp.float32) - lr * upd).astype(pf.dtype)
+            ag_reqs.append(R.iallgather(own_new, comm, algorithm=ag_algorithm))
+            new_m.append(m.astype(state["m"][gi].dtype))
+            new_v.append(v.astype(state["v"][gi].dtype))
+        gathered = R.waitall(ag_reqs)
+    except BaseException:
+        # a failure mid-issue (e.g. RankFailure) must not strand the already
+        # issued allgathers — cancel them so the elastic quiesce sees a clean
+        # queue instead of stale-generation in-flight requests
+        for req in ag_reqs:
+            req.cancel()
+        raise
     new_p = [
         full[: pf.shape[0]]
-        for full, pf in zip(R.waitall(ag_reqs), p_flats)
+        for full, pf in zip(gathered, p_flats)
     ]
 
     params_new = unflatten_groups(new_p, layout)

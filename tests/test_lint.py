@@ -1,0 +1,424 @@
+"""Static comm-lint (repro.analysis.lint): one positive and one negative
+fixture per rule, the suppression contract, CLI exit codes, and the
+self-test that the tree itself lints clean under ``--strict`` (the CI
+``lint`` job's invariant, asserted from inside the suite too so a plain
+pytest run catches a regression first).
+"""
+
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (
+    RULES,
+    Finding,
+    lint_paths,
+    lint_source,
+    main,
+    parse_suppressions,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+SRC_REPRO = REPO / "src" / "repro"
+
+
+def _codes(src: str, rel: str = "training/fixture.py") -> list[str]:
+    findings, _ = lint_source(textwrap.dedent(src), rel)
+    return [f.code for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# rule catalog sanity
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog():
+    assert set(RULES) == {f"FMI00{i}" for i in range(7)}
+    for rule in RULES.values():
+        assert rule.severity in ("error", "warning")
+        assert rule.hint
+    f = Finding("FMI001", "x.py", 3, 0, "boom")
+    assert f.severity == "error"
+    assert "hint:" in f.format()
+    assert "hint:" not in f.format(hints=False)
+
+
+# ---------------------------------------------------------------------------
+# FMI001 — unwaited requests
+# ---------------------------------------------------------------------------
+
+
+def test_fmi001_discarded_statement():
+    assert _codes("""
+        def f(x, t):
+            isend(x, t, [(0, 1)], tag=1)
+    """) == ["FMI001"]
+
+
+def test_fmi001_underscore_assignment():
+    assert _codes("""
+        def f(x, comm):
+            _ = iallreduce(x, comm)
+    """) == ["FMI001"]
+
+
+def test_fmi001_never_used():
+    assert _codes("""
+        def f(x, comm):
+            req = iallreduce(x, comm)
+            return x
+    """) == ["FMI001"]
+
+
+def test_fmi001_conditional_only_completion():
+    assert _codes("""
+        def f(x, comm, flag):
+            req = iallreduce(x, comm)
+            if flag:
+                return req.wait()
+    """) == ["FMI001"]
+
+
+def test_fmi001_loop_append_with_trailing_work():
+    assert _codes("""
+        def f(chunks, comm):
+            reqs = []
+            for c in chunks:
+                reqs.append(iallgather(c, comm))
+                validate(c)
+            return waitall(reqs)
+    """) == ["FMI001"]
+
+
+def test_fmi001_negatives():
+    # straightforwardly waited
+    assert _codes("""
+        def f(x, comm):
+            req = iallreduce(x, comm)
+            return req.wait()
+    """) == []
+    # guard tests the request itself (completion is the condition)
+    assert _codes("""
+        def f(x, comm):
+            req = iallreduce(x, comm)
+            if not req.test():
+                req.wait()
+    """) == []
+    # exception handler that cancels counts as a completion path
+    assert _codes("""
+        def f(x, comm):
+            req = iallreduce(x, comm)
+            try:
+                other_work()
+            except Exception:
+                req.cancel()
+                raise
+            return req.wait()
+    """) == []
+    # loop-append guarded by a cancelling handler (the zero1 idiom)
+    assert _codes("""
+        def f(chunks, comm):
+            reqs = []
+            try:
+                for c in chunks:
+                    reqs.append(iallgather(c, comm))
+                    validate(c)
+                out = waitall(reqs)
+            except BaseException:
+                for r in reqs:
+                    r.cancel()
+                raise
+            return out
+    """) == []
+    # loop-append with no trailing statements: nothing can raise after issue
+    assert _codes("""
+        def f(chunks, comm):
+            reqs = []
+            for c in chunks:
+                reqs.append(iallgather(c, comm))
+            return waitall(reqs)
+    """) == []
+    # transport-level issues skip the conditional-path clause (kernels wait
+    # them in structured patterns); core/ relpath keeps FMI004 out of frame
+    assert _codes("""
+        def f(x, t, fwd, flag):
+            req = t.ppermute_start(x, fwd)
+            if flag:
+                out = req.wait()
+    """, rel="core/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# FMI002 — collective-order divergence under rank conditionals
+# ---------------------------------------------------------------------------
+
+
+def test_fmi002_divergent_branches():
+    assert _codes("""
+        def f(x, comm, rank):
+            if rank == 0:
+                comm.allreduce(x)
+            else:
+                pass
+    """) == ["FMI002"]
+
+
+def test_fmi002_negatives():
+    # same ladder on both branches: fine
+    assert _codes("""
+        def f(x, y, comm, rank):
+            if rank == 0:
+                comm.allreduce(x)
+            else:
+                comm.allreduce(y)
+    """) == []
+    # non-rank condition: out of scope
+    assert _codes("""
+        def f(x, comm, flag):
+            if flag:
+                comm.allreduce(x)
+    """) == []
+    # jax.lax.scan is not our collective
+    assert _codes("""
+        def f(x, rank):
+            if rank == 0:
+                return jax.lax.scan(body, x, None)
+            return x
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# FMI003 — blocking collective inside a scheduled region
+# ---------------------------------------------------------------------------
+
+
+def test_fmi003_blocking_between_submit_and_drain():
+    assert _codes("""
+        def f(grads, comm, sched):
+            for name, g in grads:
+                sched.submit(name, g)
+            comm.barrier()
+            return sched.drain()
+    """) == ["FMI003"]
+
+
+def test_fmi003_negatives():
+    # blocking work before the first submit is fine
+    assert _codes("""
+        def f(x, grads, comm, sched):
+            comm.allreduce(x)
+            for name, g in grads:
+                sched.submit(name, g)
+            return sched.drain()
+    """) == []
+    # after the drain too
+    assert _codes("""
+        def f(x, grads, comm, sched):
+            for name, g in grads:
+                sched.submit(name, g)
+            out = sched.drain()
+            comm.barrier()
+            return out
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# FMI004 — raw transport bypassing the Communicator
+# ---------------------------------------------------------------------------
+
+
+def test_fmi004_raw_transport_outside_core():
+    assert _codes("""
+        def f():
+            return SimTransport(4)
+    """, rel="serving/fixture.py") == ["FMI004"]
+    assert _codes("""
+        def f(t, x, fwd):
+            return t.ppermute(x, fwd)
+    """, rel="runtime/fixture.py") == ["FMI004"]
+
+
+def test_fmi004_negatives():
+    # core/ owns the transports
+    assert _codes("""
+        def f():
+            return SimTransport(4)
+    """, rel="core/fixture.py") == []
+    # the blessed path
+    assert _codes("""
+        def f(comm):
+            return comm.transport()
+    """, rel="serving/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# FMI005 — nondeterminism in the bit-exact decode path
+# ---------------------------------------------------------------------------
+
+
+def test_fmi005_positives():
+    src = """
+        def f(membership):
+            t0 = time.time()
+            r = random.random()
+            z = np.random.rand(3)
+            rng = default_rng()
+            for a in set(ranks):
+                ping(a)
+            for b in membership.group():
+                ping(b)
+    """
+    codes = _codes(src, rel="serving/fixture.py")
+    assert codes == ["FMI005"] * 6
+    # core/algorithms.py is in scope too
+    assert _codes("def f():\n    return time.time()",
+                  rel="core/algorithms.py") == ["FMI005"]
+
+
+def test_fmi005_negatives():
+    src = """
+        def f(membership, seed):
+            t0 = _time.perf_counter()
+            rng = default_rng(seed)
+            for b in sorted(membership.group()):
+                ping(b)
+    """
+    assert _codes(src, rel="serving/fixture.py") == []
+    # out of scope: training code may use wall clocks
+    assert _codes("def f():\n    return time.time()",
+                  rel="training/fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# FMI006 — generation-unstamped Request construction
+# ---------------------------------------------------------------------------
+
+
+def test_fmi006_unstamped_request():
+    assert _codes("""
+        def f(nbytes):
+            return Request("send", nbytes, 0, result=None)
+    """) == ["FMI006"]
+
+
+def test_fmi006_negatives():
+    assert _codes("""
+        def f(nbytes, comm):
+            return Request("send", nbytes, 0, result=None,
+                           generation=comm.generation)
+    """) == []
+    # not our Request
+    assert _codes("""
+        def f(url):
+            return urllib.request.Request(url)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_is_honored():
+    src = textwrap.dedent("""
+        def f():
+            return SimTransport(4)  # fmi-lint: disable=FMI004 -- test-owned channel
+    """)
+    findings, suppressed = lint_source(src, "serving/fixture.py")
+    assert findings == [] and suppressed == 1
+
+
+def test_suppression_line_above():
+    src = textwrap.dedent("""
+        def f():
+            # fmi-lint: disable=FMI004 -- test-owned channel
+            return SimTransport(4)
+    """)
+    findings, suppressed = lint_source(src, "serving/fixture.py")
+    assert findings == [] and suppressed == 1
+
+
+def test_reasonless_suppression_is_fmi000_and_ignored():
+    src = textwrap.dedent("""
+        def f():
+            return SimTransport(4)  # fmi-lint: disable=FMI004
+    """)
+    findings, suppressed = lint_source(src, "serving/fixture.py")
+    assert sorted(f.code for f in findings) == ["FMI000", "FMI004"]
+    assert suppressed == 0
+
+
+def test_suppression_wrong_code_does_not_apply():
+    src = textwrap.dedent("""
+        def f():
+            return SimTransport(4)  # fmi-lint: disable=FMI001 -- wrong code
+    """)
+    findings, suppressed = lint_source(src, "serving/fixture.py")
+    assert [f.code for f in findings] == ["FMI004"] and suppressed == 0
+
+
+def test_parse_suppressions_multi_code():
+    supp = parse_suppressions(
+        "x = 1  # fmi-lint: disable=FMI001, FMI005 -- both intentional\n")
+    (codes, reason), = supp.values()
+    assert codes == frozenset({"FMI001", "FMI005"})
+    assert reason == "both intentional"
+
+
+# ---------------------------------------------------------------------------
+# CLI driver
+# ---------------------------------------------------------------------------
+
+
+def _write(tmp_path, name, src):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return str(p)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = _write(tmp_path, "clean.py", """
+        def f(x, comm):
+            return iallreduce(x, comm).wait()
+    """)
+    assert main([clean]) == 0
+
+    erroring = _write(tmp_path, "bad.py", """
+        def f(x, comm):
+            _ = iallreduce(x, comm)
+    """)
+    assert main([erroring]) == 1
+    out = capsys.readouterr().out
+    assert "FMI001" in out and "hint:" in out
+
+    assert main([erroring, "--no-hints"]) == 1
+    assert "hint:" not in capsys.readouterr().out
+
+    assert main([str(tmp_path / "missing.py")]) == 2
+
+
+def test_cli_strict_escalates_warnings(tmp_path):
+    # FMI004 is warning-severity: default run passes, --strict fails
+    warny = _write(tmp_path, "serving_fixture.py", """
+        def f():
+            return SimTransport(4)
+    """)
+    assert main([warny]) == 0
+    assert main([warny, "--strict"]) == 1
+
+
+def test_cli_syntax_error_is_usage_error(tmp_path):
+    broken = _write(tmp_path, "broken.py", "def f(:\n")
+    assert main([broken]) == 2
+
+
+# ---------------------------------------------------------------------------
+# the tree itself
+# ---------------------------------------------------------------------------
+
+
+def test_src_repro_lints_clean_strict():
+    findings, n_files, _ = lint_paths([str(SRC_REPRO)])
+    assert n_files > 50
+    assert findings == [], "\n".join(f.format() for f in findings)

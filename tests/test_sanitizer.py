@@ -1,0 +1,357 @@
+"""CommSanitizer (repro.analysis.sanitizer): the four seeded defect classes
+— collective mismatch, request leak, cross-generation wait, tag race — each
+produce their diagnostic, clean runs of the same machinery produce none,
+and the resource checks (KV pages, queues, brokers) plus the activation
+plumbing (env gate, ``Communicator(sanitize=True)``, ``scoped``) behave.
+"""
+
+import gc
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizer as SAN
+from repro.analysis.sanitizer import CommSanitizer, SanitizerError, scoped
+from repro.core import requests as R
+from repro.core.communicator import Communicator
+from repro.core.requests import Request, RequestQueue
+from repro.core.transport import SimTransport
+from repro.serving.kv_cache import PagedKVCache
+
+
+def _comm(P=2, channel="sim"):
+    return Communicator(axes=("data",), sizes=(P,), channel=channel)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_activation():
+    yield
+    SAN._reset_for_tests()
+
+
+# ---------------------------------------------------------------------------
+# defect class 1: collective-sequence divergence
+# ---------------------------------------------------------------------------
+
+
+def test_collective_mismatch_detected():
+    with scoped() as s:
+        # rank 0 ran an allreduce where rank 1 ran a bcast (the classic
+        # rank-conditional-branch bug FMI002 catches statically)
+        s.on_collective("w@host", "allreduce", 64, 2, rank=0)
+        s.on_collective("w@host", "bcast", 64, 2, rank=1)
+        s.barrier_check("w@host", 2)
+    rep = s.report()
+    assert rep.kinds() == {"collective-mismatch": 1}
+    (d,) = rep.diagnostics
+    assert "allreduce:64B" in d.message and "bcast:64B" in d.message
+
+
+def test_collective_byte_divergence_detected():
+    with scoped() as s:
+        s.on_collective("w@host", "allreduce", 64, 2, rank=0)
+        s.on_collective("w@host", "allreduce", 128, 2, rank=1)
+        s.barrier_check("w@host", 2)
+    assert s.report().kinds() == {"collective-mismatch": 1}
+
+
+def test_collective_missing_rank_detected():
+    with scoped() as s:
+        s.on_collective("w@host", "allreduce", 64, 2, rank=0)  # rank 1 silent
+        s.barrier_check("w@host", 2)
+    assert s.report().kinds() == {"collective-mismatch": 1}
+
+
+def test_collective_ladders_clean_on_real_stack():
+    with scoped() as s:
+        comm = _comm(4)
+        comm.allreduce(np.ones((4, 8), np.float32))
+        comm.bcast(np.ones((4, 8), np.float32))
+        comm.barrier()  # lockstep: one call covers every rank -> identical
+    rep = s.report()
+    assert rep.clean
+    assert rep.counters["barriers"] == 1
+    assert rep.counters["collectives"] >= 3  # allreduce, bcast, barrier
+
+
+def test_barrier_starts_new_epoch():
+    with scoped() as s:
+        s.on_collective("w@host", "allreduce", 64, 2, rank=0)
+        s.on_collective("w@host", "allreduce", 64, 2, rank=1)
+        s.barrier_check("w@host", 2)  # matched -> clean, ladders reset
+        s.on_collective("w@host", "bcast", 8, 2, rank=0)
+        s.on_collective("w@host", "bcast", 8, 2, rank=1)
+        s.barrier_check("w@host", 2)
+    assert s.report().clean
+
+
+# ---------------------------------------------------------------------------
+# defect class 2: request GC'd while pending
+# ---------------------------------------------------------------------------
+
+
+def test_request_leak_detected_with_creation_stack():
+    with scoped() as s:
+        req = R.iallreduce(np.ones((2, 4), np.float32), _comm(2),
+                           finalize=lambda r: r)  # finalize keeps it pending
+        del req
+        gc.collect()
+        rep = s.report()
+    assert rep.kinds() == {"request-leak": 1}
+    (d,) = rep.diagnostics
+    assert "allreduce" in d.message and "never" in d.message
+    assert "test_sanitizer" in d.where  # the creation stack points here
+
+
+def test_no_leak_when_waited_cancelled_or_done_at_issue():
+    with scoped() as s:
+        comm = _comm(2)
+        x = np.ones((2, 4), np.float32)
+        R.iallreduce(x, comm, finalize=lambda r: r).wait()
+        R.iallreduce(x, comm, finalize=lambda r: r).cancel()
+        R.iallreduce(x, comm).wait()  # completes at issue: nothing to track
+        gc.collect()
+        assert s.report().clean
+
+
+# ---------------------------------------------------------------------------
+# defect class 3: cross-generation wait
+# ---------------------------------------------------------------------------
+
+
+def test_cross_generation_wait_detected():
+    with scoped() as s:
+        comm = _comm(2)
+        req = R.iallreduce(np.ones((2, 4), np.float32), comm,
+                           finalize=lambda r: r)
+        comm.regroup(sizes=(1,))  # membership change: generation 0 -> 1
+        req.wait()  # stale-generation wait: quiesce should have cancelled it
+    rep = s.report()
+    assert rep.kinds() == {"cross-generation-wait": 1}
+    assert "generation 0" in rep.diagnostics[0].message
+
+
+def test_quiesced_request_does_not_flag_cross_generation():
+    with scoped() as s:
+        comm = _comm(2)
+        q = RequestQueue()
+        q.push(R.iallreduce(np.ones((2, 4), np.float32), comm,
+                            finalize=lambda r: r))
+        comm2 = comm.regroup(sizes=(1,))
+        q.cancel_all(comm.generation)  # the elastic protocol's actual order
+        # the next generation's traffic is fine
+        R.iallreduce(np.ones((1, 4), np.float32), comm2,
+                     finalize=lambda r: r).wait()
+        gc.collect()
+        assert s.report().clean
+
+
+# ---------------------------------------------------------------------------
+# defect class 4: tag race on concurrent same-peer sends
+# ---------------------------------------------------------------------------
+
+
+def test_tag_race_detected():
+    with scoped() as s:
+        t = SimTransport(2)
+        x = np.ones((2, 4), np.float32)
+        R.isend(x, t, [(0, 1), (1, 0)], tag=1)
+        R.isend(x, t, [(0, 1), (1, 0)], tag=2)  # same pairs, tag 1 in flight
+        rep = s.report()
+        assert rep.kinds() == {"tag-race": 2}  # both pairs race
+        assert "no ordering guarantee" in rep.diagnostics[0].message
+        R.abort_mailbox(t)
+
+
+def test_sequential_tags_do_not_race():
+    with scoped() as s:
+        t = SimTransport(2)
+        x = np.ones((2, 4), np.float32)
+        R.isend(x, t, [(0, 1), (1, 0)], tag=1)
+        R.irecv(t, tag=1).wait()  # claimed before the next send
+        R.isend(x, t, [(0, 1), (1, 0)], tag=2)
+        R.irecv(t, tag=2).wait()
+        assert s.report().clean
+
+
+def test_mailbox_abort_clears_in_flight_tags():
+    with scoped() as s:
+        t = SimTransport(2)
+        x = np.ones((2, 4), np.float32)
+        R.isend(x, t, [(0, 1)], tag=1)
+        R.abort_mailbox(t)
+        R.isend(x, t, [(0, 1)], tag=2)  # no race: the old epoch was aborted
+        R.abort_mailbox(t)
+        assert s.report().clean
+        assert s.report().counters["mailbox_aborts"] == 2
+
+
+# ---------------------------------------------------------------------------
+# double-cancel / double-wait
+# ---------------------------------------------------------------------------
+
+
+def test_double_cancel_detected():
+    with scoped() as s:
+        req = Request("allreduce", thunk=lambda: 1, generation=0)
+        assert req.cancel() is True
+        assert req.cancel() is False
+    assert s.report().kinds() == {"double-cancel": 1}
+
+
+def test_rewait_is_counter_only_by_default():
+    # the scheduler's drain legitimately re-waits (per-request wait, then
+    # queue.waitall) — that must NOT be a diagnostic unless asked for
+    with scoped() as s:
+        req = Request("allreduce", thunk=lambda: 7, generation=0)
+        assert req.wait() == req.wait() == 7
+        assert s.report().clean
+        assert s.report().counters["rewaits"] == 1
+    with scoped(flag_rewait=True) as s:
+        req = Request("allreduce", thunk=lambda: 7, generation=0)
+        req.wait()
+        req.wait()
+        assert s.report().kinds() == {"double-wait": 1}
+
+
+# ---------------------------------------------------------------------------
+# resource checks: KV pages, queues, brokers
+# ---------------------------------------------------------------------------
+
+
+def test_kv_page_leak_detected_and_clean_after_free():
+    kv = PagedKVCache(layers=1, n_pages=4, page_size=8, heads_local=2,
+                      head_dim=4, world=1)
+    with scoped() as s:
+        kv.alloc(7, capacity=12)
+        s.check_kv(kv, "test-close")
+        assert s.report().kinds() == {"kv-page-leak": 1}
+        assert "[7]" in s.report().diagnostics[0].message
+    with scoped() as s:
+        kv.free(7)
+        s.check_kv(kv, "test-close")
+        assert s.report().clean
+        assert s.report().counters == {"kv_frees": 1}
+
+
+def test_pending_at_close_detected():
+    with scoped() as s:
+        q = RequestQueue()
+        q.push(Request("allreduce", thunk=lambda: 1, generation=0))
+        s.check_queue(q, "test-close")
+        assert s.report().kinds() == {"pending-at-close": 1}
+        q.cancel_all()
+    with scoped() as s:
+        q = RequestQueue()
+        q.push(Request("allreduce", thunk=lambda: 1, generation=0))
+        q.waitall()
+        s.check_queue(q, "test-close")
+        assert s.report().clean
+
+
+def test_broker_key_leak_detected():
+    stats = types.SimpleNamespace(live_keys=3, puts=5, gets=2, aborts=0)
+    broker = types.SimpleNamespace(stats=stats)
+    with scoped() as s:
+        s.check_broker(broker, "test-close")
+        assert s.report().kinds() == {"broker-key-leak": 1}
+    stats.live_keys = 0
+    with scoped() as s:
+        s.check_broker(broker, "test-close")
+        assert s.report().clean
+
+
+# ---------------------------------------------------------------------------
+# engine integration: close is the leak checkpoint AND the cleanup
+# ---------------------------------------------------------------------------
+
+
+def _engine(**kw):
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.tp_lm import TPServeConfig
+
+    cfg = TPServeConfig(vocab_size=32, d_model=16, n_heads=4, head_dim=4,
+                        d_ff=32, n_layers=1, max_len=16, ff_chunks=4)
+    return ContinuousBatchingEngine(cfg, world=2, max_slots=2, kv_pages=8,
+                                    page_size=4, **kw)
+
+
+def test_engine_full_run_is_clean():
+    with scoped() as s:
+        eng = _engine()
+        for prompt in ([1, 2, 3], [4, 5]):
+            eng.submit(prompt, max_new=3)
+        out = eng.run()
+        eng.close()
+        gc.collect()
+    assert sorted(len(v) for v in out.values()) == [3, 3]
+    assert s.report().clean, s.report().format()
+
+
+def test_engine_abandoned_mid_serve_is_diagnosed_then_cleaned():
+    with scoped() as s:
+        eng = _engine()
+        eng.submit([1, 2, 3], max_new=8)
+        eng.step()  # admits + prefills: the sequence now holds pages
+        assert eng.kv.live_seqs
+        eng.close()  # the leak checkpoint
+        assert eng.kv.live_seqs == ()  # ... and the cleanup
+    assert s.report().kinds().get("kv-page-leak") == 1
+
+
+# ---------------------------------------------------------------------------
+# activation plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_env_gate(monkeypatch):
+    SAN._reset_for_tests()
+    monkeypatch.delenv("FMI_SANITIZE", raising=False)
+    assert SAN.get_active() is None
+    SAN._reset_for_tests()
+    monkeypatch.setenv("FMI_SANITIZE", "1")
+    s = SAN.get_active()
+    assert isinstance(s, CommSanitizer)
+    assert SAN.get_active() is s  # cached
+
+
+def test_communicator_sanitize_flag_activates(monkeypatch):
+    SAN._reset_for_tests()
+    monkeypatch.delenv("FMI_SANITIZE", raising=False)
+    assert SAN.get_active() is None
+    comm = Communicator(axes=("data",), sizes=(2,), channel="sim",
+                        sanitize=True)
+    s = SAN.get_active()
+    assert isinstance(s, CommSanitizer)
+    # sanitize is excluded from equality: same group compares equal
+    assert comm == Communicator(axes=("data",), sizes=(2,), channel="sim")
+
+
+def test_scoped_restores_previous():
+    outer = SAN.activate()
+    with scoped() as inner:
+        assert SAN.get_active() is inner
+    assert SAN.get_active() is outer
+    SAN.deactivate()
+
+
+def test_strict_raises_at_the_offending_hook():
+    with scoped(strict=True) as s:
+        req = Request("allreduce", thunk=lambda: 1, generation=0)
+        req.cancel()
+        with pytest.raises(SanitizerError, match="double-cancel"):
+            req.cancel()
+    assert s.report().kinds() == {"double-cancel": 1}
+
+
+def test_report_roundtrip():
+    with scoped() as s:
+        s.on_collective("w@host", "allreduce", 64, 2, rank=0)
+        s.barrier_check("w@host", 2)
+    rep = s.report()
+    d = rep.to_dict()
+    assert d["clean"] is False
+    assert d["diagnostics"][0]["kind"] == "collective-mismatch"
+    assert "collective-mismatch" in rep.format()
+    assert "counters:" in rep.format()

@@ -33,6 +33,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 #: docs/elasticity.md, docs/nonblocking.md and docs/serving.md code
 #: references.
 DOCTEST_MODULES = (
+    "repro.analysis.lint",
+    "repro.analysis.sanitizer",
     "repro.core.requests",
     "repro.core.scheduler",
     "repro.core.algorithms",

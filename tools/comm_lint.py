@@ -1,0 +1,24 @@
+#!/usr/bin/env python
+"""CLI wrapper for the static comm-lint pass (``repro.analysis.lint``).
+
+Runs without installation — the repo's ``src/`` is put on ``sys.path``
+directly, and the linter itself imports nothing from the checked code::
+
+    python tools/comm_lint.py src/repro --strict
+
+Exit codes: 0 clean, 1 findings (``--strict``: any; default: errors only),
+2 usage error.  This is what the CI ``lint`` job runs; the installed
+``comm-lint`` console script (see ``pyproject.toml``) is the same entry
+point.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
