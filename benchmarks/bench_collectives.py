@@ -152,5 +152,148 @@ def _request_rows():
     return rows
 
 
+def _flow_rows():
+    """Modeled vs flow-simulated completion time for the tier-1 collective
+    core — the CSV face of the divergence artifact (``--backend flow``)."""
+    from repro.core.flowsim import compare_backends
+
+    rows = []
+    for ch in ("sim", "host"):
+        for op, algo in (("allreduce", "recursive_doubling"),
+                         ("allreduce", "ring"),
+                         ("reduce_scatter", "ring"),
+                         ("allgather", "ring")):
+            for P in (4, 8, 16):
+                c = compare_backends(op, algo, 1 << 20, P, channel=ch)
+                rows.append((
+                    f"flowsim/{op}/{algo}@{ch}/P{P}", c.flow_s * 1e6,
+                    f"topology={c.topology} model={c.modeled_s*1e6:.1f}us "
+                    f"divergence={c.divergence*100:+.1f}%",
+                ))
+    return rows
+
+
+def divergence_report():
+    """The artifact ``--backend both`` uploads: scenarios where the emergent
+    flow times break the α-β account by far more than 20%, plus the
+    calibration record showing ``selector.calibrate`` recovering >=2x of the
+    mean relative prediction error on the incast sweep."""
+    from repro.core.flowsim import (FlowTransport, Topology, co_schedule,
+                                    compare_backends)
+    from repro.core.selector import calibrate
+
+    scenarios = []
+    # Broker incast: every message of a P=8 round funnels through the one
+    # broker link of the mediated (star) topology — 8-deep incast the
+    # per-message α-β model cannot see.
+    for nbytes in (1 << 18, 1 << 20, 1 << 22):
+        c = compare_backends("allreduce", "recursive_doubling", nbytes, 8,
+                             channel="host")
+        scenarios.append({
+            "scenario": "broker_incast", "channel": "host",
+            "topology": c.topology, "op": c.op, "algorithm": c.algorithm,
+            "P": c.P, "nbytes": c.nbytes, "incast_depth": c.P,
+            "modeled_s": c.modeled_s, "flow_s": c.flow_s,
+            "divergence": c.divergence,
+        })
+    # Two co-scheduled jobs sharing every link of one flat switch: each
+    # job's flows run at half rate in the bandwidth regime, while the model
+    # prices each job as if it owned the network.
+    P, elems = 8, 1 << 18  # 1 MiB/rank: bandwidth-dominated
+    topo = Topology.flat(P, bw=16e9, latency_s=5e-6)
+    jobs = []
+    for name in ("job_a", "job_b"):
+        t = FlowTransport(P, topology=topo, job=name)
+        A.ALGORITHMS["allreduce"]["ring"](
+            t, np.ones((P, elems), np.float32), "add")
+        jobs.append(t)
+    solo = jobs[0].finish_time()
+    shared = co_schedule(jobs, topo).job_makespan("job_a")
+    modeled = collective_time_ext("allreduce", "ring", elems * 4, P,
+                                  CHANNELS["sim"], depth=1)
+    scenarios.append({
+        "scenario": "co_scheduled_jobs", "channel": "sim",
+        "topology": topo.name, "op": "allreduce", "algorithm": "ring",
+        "P": P, "nbytes": elems * 4, "jobs": 2,
+        "modeled_s": modeled, "flow_s": shared, "solo_flow_s": solo,
+        "divergence": (shared - modeled) / modeled,
+    })
+    # Calibration on the incast sweep: one contention regime, so the
+    # weighted-median correction recovers most of the model's error.
+    cal = calibrate(
+        channels=("sim",), ops=("allreduce",), P_values=(8,),
+        nbytes_grid=(1 << 18, 1 << 20, 1 << 22),
+        topology=lambda spec, p: Topology.star(
+            p, bw=1 / spec.beta, broker_bw=1 / spec.beta,
+            latency_s=spec.alpha),
+    )
+    cut = (cal.mean_rel_err_before / cal.mean_rel_err_after
+           if cal.mean_rel_err_after > 0 else float("inf"))
+    max_div = max(abs(s["divergence"]) for s in scenarios)
+    return {
+        "scenarios": scenarios,
+        "calibration": {
+            "sweep": "star incast, allreduce, P=8, 256KiB..4MiB",
+            "scales": dict(cal.scales),
+            "n_samples": len(cal.samples),
+            "mean_rel_err_before": cal.mean_rel_err_before,
+            "mean_rel_err_after": cal.mean_rel_err_after,
+            "error_cut": cut,
+        },
+        "acceptance": {
+            "max_abs_divergence": max_div,
+            "divergence_gt_20pct": max_div > 0.20,
+            "calibration_cut_ge_2x": cut >= 2.0,
+        },
+    }
+
+
 def run():
     return _fig5_rows() + _pipeline_rows() + _host_rows() + _request_rows()
+
+
+def main(argv=None) -> int:
+    """CLI for the CI flow-backend smoke leg.
+
+    ``--backend model`` prints the classic modeled/measured rows,
+    ``--backend flow`` the modeled-vs-flow divergence rows, ``--backend
+    both`` prints both and writes the divergence artifact JSON to
+    ``--out``."""
+    import argparse
+    import json
+    import os
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", choices=("model", "flow", "both"),
+                    default="model")
+    ap.add_argument("--out", default="benchmarks/artifacts/flowsim/"
+                                     "divergence.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    if args.backend in ("model", "both"):
+        rows += run()
+    if args.backend in ("flow", "both"):
+        rows += _flow_rows()
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us:.2f},{derived}")
+
+    if args.backend == "both":
+        report = divergence_report()
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=1)
+            fh.write("\n")
+        acc = report["acceptance"]
+        print(f"# divergence artifact -> {args.out}: "
+              f"max |divergence| {acc['max_abs_divergence']*100:.1f}%, "
+              f"calibration error cut "
+              f"{report['calibration']['error_cut']:.2f}x")
+        if not (acc["divergence_gt_20pct"] and acc["calibration_cut_ge_2x"]):
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

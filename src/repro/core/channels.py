@@ -40,6 +40,12 @@ sim          direct    :class:`~repro.core.transport.SimTransport`
 host         mediated  :class:`~repro.core.transport.HostTransport`
                        (PUT/GET through a shared host-memory broker — the
                        TPU analogue of the paper's S3/Redis channels)
+flow         direct    :class:`~repro.core.flowsim.FlowTransport`
+                       (flow-level network simulation: emergent contention
+                       over an explicit topology; private — a validation
+                       instrument, not a selector candidate.  Setting
+                       ``FMI_SIM_BACKEND=flow`` also swaps it in behind
+                       the ``sim`` name for differential test legs)
 s3 dynamodb  mediated  none — model-only AWS channels (paper Table 2);
 redis direct           priced by :mod:`repro.core.pricing`
 ===========  ========  =====================================================
@@ -48,6 +54,7 @@ redis direct           priced by :mod:`repro.core.pricing`
 from __future__ import annotations
 
 import math
+import os
 from dataclasses import dataclass
 from typing import Callable
 
@@ -206,7 +213,23 @@ def _jax_factory(axes=None, sizes=None, size=None, **_):
 def _sim_factory(size=None, **_):
     if not size:
         raise ValueError("sim channel needs size=")
+    if os.environ.get("FMI_SIM_BACKEND", "").strip().lower() == "flow":
+        # differential-testing hook: the whole sim-channel stack (requests,
+        # scheduler, elastic runtime) reruns on the flow-level backend with
+        # no code changes — bytes and traces must be identical, only the
+        # emergent timing account differs (see docs/flowsim.md)
+        from .flowsim import FlowTransport
+
+        return FlowTransport(size)
     return SimTransport(size)
+
+
+def _flow_factory(size=None, topology=None, job="job0", **_):
+    if not size:
+        raise ValueError("flow channel needs size=")
+    from .flowsim import FlowTransport
+
+    return FlowTransport(size, topology=topology, job=job)
 
 
 def _host_factory(size=None, broker: HostBroker | None = None, **_):
@@ -229,6 +252,12 @@ for _name, _factory in (
     ("direct", None),
 ):
     register(Channel(_SPECS[_name], _factory))
+
+# Flow-level simulation backend (repro.core.flowsim): resolvable by name —
+# Communicator(channel="flow") — but private, so the second timing account
+# never competes with "sim" in algorithm='auto' selections (their specs are
+# identical; enumerating both would only duplicate every sim row).
+register(Channel(_SPECS["flow"], _flow_factory, private=True))
 
 # pristine snapshot for unregister() to restore built-ins from
 _BUILTIN_CHANNELS: dict[str, Channel] = dict(_REGISTRY)

@@ -1,0 +1,510 @@
+"""Flow-level network simulation: an independent examiner for the α-β model.
+
+Every other account of collective time in this repo — the
+:class:`~repro.core.transport.ChannelTrace` oracle, the selector's candidate
+table, the bucket/serve/rescale plans — is *derived from the same α-β(+γ)
+round model*, so when a trace "validates" the model it is grading its own
+homework.  This module provides the missing independent account: collectives
+are expanded into per-message :class:`Flow` records routed over an explicit
+:class:`Topology`, and a **max-min fair-share event loop**
+(:func:`simulate`) produces *emergent* completion times.  Link contention,
+broker incast, and multi-job interference appear as consequences of the
+routing, not as modeled terms — which is exactly what lets the differential
+harness in ``tests/test_flowsim.py`` find the regimes where the α-β model
+is wrong (and lets :func:`repro.core.selector.calibrate` correct it).
+
+The three pieces:
+
+* :class:`Topology` — named links with bandwidths plus a routing rule.
+  Factories: :meth:`Topology.flat` (per-rank up/down links into one ideal
+  switch — the α-β model's implicit world), :meth:`Topology.star` (all
+  traffic through one shared broker link — mediated-channel incast),
+  :meth:`Topology.hierarchical` (full-bandwidth links inside a group,
+  shared uplinks between groups).
+* :class:`FlowTransport` — a drop-in second software backend: a
+  :class:`~repro.core.transport.SimTransport` subclass whose
+  ``ppermute_start`` additionally records one :class:`Flow` per ``(src,
+  dst)`` pair.  Payload bytes, trace accounting (pending-slot semantics
+  included), ``kill``/``revive`` fault injection and request ``cancel``
+  are all inherited/preserved — the backend may change *time*, never
+  *bytes* — so :mod:`repro.core.requests`, :mod:`repro.core.scheduler`
+  and the elastic runtime run unmodified on it
+  (``FMI_SIM_BACKEND=flow`` swaps it in behind the ``sim`` channel).
+* :func:`simulate` — virtual-time event loop: flows activate when their
+  dependency flows finish (slot *k+1* waits on slot *k* — the lockstep
+  round barrier), active flows share every link max-min fairly
+  (iterative water-filling), time advances to the next completion or
+  activation.  Deterministic by construction: no wall clocks, no RNG.
+
+Runnable example — broker incast is emergent, not modeled.  One
+recursive-doubling round at P=8 moves 8 concurrent messages; on the flat
+topology they use disjoint links and finish in ``α + s·β``, while the star
+topology funnels all 8 through the broker link, which max-min sharing
+stretches ~8×:
+
+    >>> from repro.core.flowsim import Topology, flow_time
+    >>> flat = flow_time("allreduce", "recursive_doubling", 1 << 20, 8,
+    ...                  topology=Topology.flat(8, bw=16e9))
+    >>> star = flow_time("allreduce", "recursive_doubling", 1 << 20, 8,
+    ...                  topology=Topology.star(8, bw=16e9, broker_bw=16e9))
+    >>> star / flat > 4          # ≫ 20% divergence from the α-β account
+    True
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from .models import ChannelSpec
+from .transport import Perm, SimTransport, TransportRequest
+
+__all__ = [
+    "Flow",
+    "Topology",
+    "FlowSchedule",
+    "FlowTransport",
+    "simulate",
+    "co_schedule",
+    "expand_collective",
+    "flow_time",
+    "compare_backends",
+    "BackendComparison",
+]
+
+#: Residual-bytes tolerance below which a transfer counts as finished.
+_EPS_BYTES = 1e-9
+#: Relative tolerance for "this link is (one of) the bottleneck(s)".
+_EPS_REL = 1e-12
+
+
+@dataclass(frozen=True)
+class Flow:
+    """One wire message: ``nbytes`` from ``src`` to ``dst`` along ``route``.
+
+    ``deps`` are the fids (same ``job``) that must *finish* before this flow
+    may start — the issue-order barrier :class:`FlowTransport` derives from
+    the trace's serialized slots.  ``slot`` records which serialized slot
+    the flow was issued in (golden fixtures compare it structurally);
+    ``job`` namespaces fids so flows from co-scheduled transports can share
+    one topology in a single :func:`simulate` call."""
+
+    fid: int
+    src: int
+    dst: int
+    nbytes: int
+    route: tuple[str, ...]
+    deps: tuple[int, ...] = ()
+    slot: int = 0
+    job: str = "job0"
+
+
+class Topology:
+    """Named links (bandwidth in B/s) plus a ``(src, dst) -> route`` rule.
+
+    ``latency_s`` is charged once per flow, between its dependencies
+    finishing and its bytes starting to move — the flow-level analogue of
+    the model's per-message α.  Routes are tuples of link names; a flow
+    occupies **every** link on its route for its whole transfer and moves
+    at the max-min fair rate of its most contended link.  An empty route
+    (``src == dst``) is a loopback: the flow completes at activation."""
+
+    def __init__(self, name: str, links: Mapping[str, float], latency_s: float,
+                 route_fn: Callable[[int, int], tuple[str, ...]]):
+        self.name = name
+        self.links = dict(links)
+        self.latency_s = float(latency_s)
+        self._route_fn = route_fn
+        for link, bw in self.links.items():
+            if bw <= 0:
+                raise ValueError(f"link {link!r} needs positive bandwidth")
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return (f"Topology({self.name!r}, {len(self.links)} links, "
+                f"latency={self.latency_s:g}s)")
+
+    def route(self, src: int, dst: int) -> tuple[str, ...]:
+        if src == dst:
+            return ()
+        r = self._route_fn(int(src), int(dst))
+        for link in r:
+            if link not in self.links:
+                raise KeyError(f"route uses unknown link {link!r}")
+        return r
+
+    # -- factories ----------------------------------------------------------
+    @classmethod
+    def flat(cls, P: int, bw: float = 16e9,
+             latency_s: float = 5e-6) -> "Topology":
+        """One ideal switch: every rank has a dedicated ``up`` and ``down``
+        link of ``bw`` B/s.  Disjoint src/dst pairs never contend — this is
+        the world the α-β model implicitly assumes, so flat-topology flow
+        times track the model closely (the differential suite's baseline)."""
+        links = {}
+        for r in range(int(P)):
+            links[f"up:{r}"] = float(bw)
+            links[f"down:{r}"] = float(bw)
+        return cls(f"flat(P={P})", links, latency_s,
+                   lambda s, d: (f"up:{s}", f"down:{d}"))
+
+    @classmethod
+    def star(cls, P: int, bw: float = 16e9, broker_bw: float | None = None,
+             latency_s: float = 5e-6) -> "Topology":
+        """Broker star: every message additionally crosses one shared
+        ``broker`` link — the mediated-channel shape (S3/Redis/host broker).
+        ``k`` concurrent messages share the broker max-min, so an
+        all-ranks-active round runs ``k×`` slower than the per-message
+        model: **incast**, the first divergence scenario the α-β model
+        cannot see."""
+        links = {"broker": float(broker_bw if broker_bw is not None else bw)}
+        for r in range(int(P)):
+            links[f"up:{r}"] = float(bw)
+            links[f"down:{r}"] = float(bw)
+        return cls(f"star(P={P})", links, latency_s,
+                   lambda s, d: (f"up:{s}", "broker", f"down:{d}"))
+
+    @classmethod
+    def hierarchical(cls, P: int, inner: int, inner_bw: float = 16e9,
+                     outer_bw: float = 2e9,
+                     latency_s: float = 5e-6) -> "Topology":
+        """Groups of ``inner`` ranks with full-bandwidth links inside and one
+        shared ``out:<g>``/``in:<g>`` uplink pair per group between — the
+        pod/DCN shape the hierarchical composite candidates target.
+        Cross-group flows contend on both groups' uplinks."""
+        P, inner = int(P), int(inner)
+        if inner <= 0 or P % inner:
+            raise ValueError(f"inner={inner} must divide P={P}")
+        links = {}
+        for r in range(P):
+            links[f"up:{r}"] = float(inner_bw)
+            links[f"down:{r}"] = float(inner_bw)
+        for g in range(P // inner):
+            links[f"out:{g}"] = float(outer_bw)
+            links[f"in:{g}"] = float(outer_bw)
+
+        def route(s: int, d: int) -> tuple[str, ...]:
+            gs, gd = s // inner, d // inner
+            if gs == gd:
+                return (f"up:{s}", f"down:{d}")
+            return (f"up:{s}", f"out:{gs}", f"in:{gd}", f"down:{d}")
+
+        return cls(f"hier(P={P},inner={inner})", links, latency_s, route)
+
+    @classmethod
+    def from_spec(cls, spec: ChannelSpec, P: int) -> "Topology":
+        """Build the topology a :class:`~repro.core.models.ChannelSpec`
+        implies: link bandwidth ``1/β``, latency ``α``; mediated channels
+        (``hops=2`` broker staging) get the star shape, direct channels the
+        flat switch.  This is the bridge :func:`repro.core.selector.calibrate`
+        uses to replay the candidate sweep on the flow backend."""
+        bw = 1.0 / spec.beta
+        if spec.kind == "mediated":
+            return cls.star(P, bw=bw, broker_bw=bw, latency_s=spec.alpha)
+        return cls.flat(P, bw=bw, latency_s=spec.alpha)
+
+
+@dataclass(frozen=True)
+class FlowSchedule:
+    """:func:`simulate`'s answer: per-flow finish times (keyed ``(job,
+    fid)``) and the emergent makespan."""
+
+    finish: Mapping[tuple[str, int], float]
+    makespan: float
+    n_flows: int
+
+    def job_makespan(self, job: str) -> float:
+        return max((t for (j, _), t in self.finish.items() if j == job),
+                   default=0.0)
+
+
+def _maxmin_rates(active: Sequence[tuple[str, int]],
+                  flows: Mapping[tuple[str, int], Flow],
+                  links: Mapping[str, float]) -> dict[tuple[str, int], float]:
+    """Max-min fair rates by iterative water-filling: repeatedly find the
+    most contended link, freeze its flows at the fair share, subtract, and
+    recompute.  Loopback flows (empty route) get an infinite rate."""
+    caps = dict(links)
+    users: dict[str, set] = {}
+    rate: dict[tuple[str, int], float] = {}
+    unfrozen = set()
+    for k in active:
+        r = flows[k].route
+        if not r:
+            rate[k] = math.inf
+            continue
+        unfrozen.add(k)
+        for link in r:
+            users.setdefault(link, set()).add(k)
+    while unfrozen:
+        share = {}
+        for link in sorted(users):
+            live = len(users[link] & unfrozen)
+            if live:
+                share[link] = caps[link] / live
+        bottleneck = min(share.values())
+        newly = set()
+        for link, s in share.items():
+            if s <= bottleneck * (1 + _EPS_REL):
+                newly |= users[link] & unfrozen
+        for k in sorted(newly):
+            rate[k] = bottleneck
+            unfrozen.discard(k)
+            for link in flows[k].route:
+                caps[link] = max(0.0, caps[link] - bottleneck)
+    return rate
+
+
+def simulate(flows: Sequence[Flow], topology: Topology) -> FlowSchedule:
+    """Advance the virtual-time event loop over ``flows`` on ``topology``.
+
+    A flow *activates* ``latency_s`` after all its ``deps`` (same job) have
+    finished; active flows transfer at their max-min fair rate; virtual time
+    jumps to the next completion or activation.  Dependencies on fids not
+    present in ``flows`` (a cancelled request's dropped flows) count as
+    already finished.  Purely virtual time — deterministic, no wall clock."""
+    by_key: dict[tuple[str, int], Flow] = {}
+    for f in flows:
+        k = (f.job, f.fid)
+        if k in by_key:
+            raise ValueError(f"duplicate flow id {k}")
+        by_key[k] = f
+    rem = {k: float(f.nbytes) for k, f in by_key.items()}
+    finish: dict[tuple[str, int], float] = {}
+    waiting = set(by_key)
+    scheduled: dict[tuple[str, int], float] = {}
+    active: set[tuple[str, int]] = set()
+    t = 0.0
+
+    while waiting or scheduled or active:
+        for k in sorted(waiting):
+            f = by_key[k]
+            deps = [(f.job, d) for d in f.deps if (f.job, d) in by_key]
+            if all(d in finish for d in deps):
+                ready = max((finish[d] for d in deps), default=0.0)
+                scheduled[k] = max(t, ready + topology.latency_s)
+        waiting -= set(scheduled)
+
+        for k in [k for k, rt in scheduled.items() if rt <= t * (1 + _EPS_REL)]:
+            active.add(k)
+            del scheduled[k]
+        if not active:
+            if scheduled:
+                t = min(scheduled.values())
+                continue
+            raise RuntimeError("dependency cycle among flows")
+
+        done_now = sorted(k for k in active
+                          if rem[k] <= _EPS_BYTES or not by_key[k].route)
+        if done_now:
+            for k in done_now:
+                finish[k] = t
+                active.discard(k)
+            continue
+
+        rates = _maxmin_rates(sorted(active), by_key, topology.links)
+        dt = min(rem[k] / rates[k] for k in active)
+        if scheduled:
+            dt = min(dt, min(scheduled.values()) - t)
+        dt = max(dt, 0.0)
+        for k in active:
+            rem[k] -= rates[k] * dt
+        t += dt
+        for k in sorted(active):
+            if rem[k] <= max(_EPS_BYTES, _EPS_REL * by_key[k].nbytes):
+                finish[k] = t
+        active -= set(finish)
+
+    return FlowSchedule(finish=finish,
+                        makespan=max(finish.values(), default=0.0),
+                        n_flows=len(finish))
+
+
+def co_schedule(transports: Sequence["FlowTransport"],
+                topology: Topology) -> FlowSchedule:
+    """Simulate several transports' flows over **one shared topology** —
+    multi-job interference.  Each transport must carry a distinct ``job``
+    name (fids are namespaced per job)."""
+    jobs = [tr.job for tr in transports]
+    if len(set(jobs)) != len(jobs):
+        raise ValueError(f"co-scheduled jobs must be distinct, got {jobs}")
+    flows: list[Flow] = []
+    for tr in transports:
+        flows.extend(tr.flows)
+    return simulate(flows, topology)
+
+
+class FlowTransport(SimTransport):
+    """Second software backend: lockstep sim semantics + flow expansion.
+
+    Every ``ppermute_start`` does exactly what :class:`SimTransport` does
+    (data moves at issue, pending-slot trace accounting, fault injection)
+    and *additionally* appends one :class:`Flow` per ``(src, dst)`` pair.
+    Dependency edges encode the serialized-slot order: messages merged into
+    the open slot share its dependencies (they contend on the links — the
+    emergent analogue of streaming back-to-back), a fresh slot depends on
+    every flow of the previous slot (the lockstep round barrier).
+
+    Cancelling an in-flight request drops its flows (a cancelled exchange
+    never crossed the wire) and closes the trace slot, so the elastic
+    quiesce path leaves no phantom traffic behind.  ``kill``/``revive`` are
+    inherited unchanged.
+
+    ``finish_time()`` runs :func:`simulate` over everything issued so far —
+    the emergent completion time the α-β model is differenced against."""
+
+    def __init__(self, size: int, topology: Topology | None = None,
+                 job: str = "job0"):
+        super().__init__(size)
+        self.topology = topology if topology is not None else Topology.flat(size)
+        self.job = str(job)
+        self.flows: list[Flow] = []
+        self._next_fid = 0
+        self._slot_fids: list[int] = []  # flows issued in the open slot
+        self._slot_deps: tuple[int, ...] = ()
+
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        pairs = list(perm)
+        self._check_failures(pairs)
+        out = np.zeros_like(x)
+        itemsize = x.dtype.itemsize
+        per_msg = int(np.prod(x.shape[1:])) * itemsize
+        for src, dst in pairs:
+            out[dst] = x[src]
+        fresh_slot = self.trace.pending == 0
+        self.trace.issue(per_msg if pairs else 0, len(pairs))
+        slot = len(self.trace.per_slot) - 1
+        if fresh_slot:
+            self._slot_deps = tuple(self._slot_fids)
+            self._slot_fids = []
+        mine: list[Flow] = []
+        for src, dst in pairs:
+            f = Flow(fid=self._next_fid, src=int(src), dst=int(dst),
+                     nbytes=per_msg,
+                     route=self.topology.route(int(src), int(dst)),
+                     deps=self._slot_deps, slot=slot, job=self.job)
+            self._next_fid += 1
+            self.flows.append(f)
+            self._slot_fids.append(f.fid)
+            mine.append(f)
+
+        def abort():
+            dropped = {f.fid for f in mine}
+            self.flows = [f for f in self.flows if f.fid not in dropped]
+            self._slot_fids = [i for i in self._slot_fids if i not in dropped]
+            self.trace.complete()
+
+        return TransportRequest(out, on_wait=self._finish, on_cancel=abort)
+
+    # -- emergent timing ----------------------------------------------------
+    def schedule(self) -> FlowSchedule:
+        return simulate(self.flows, self.topology)
+
+    def finish_time(self) -> float:
+        """Emergent completion time of everything issued so far."""
+        return self.schedule().makespan
+
+    def reset_flows(self) -> None:
+        """Forget accumulated flows (the trace is left untouched)."""
+        self.flows = []
+        self._slot_fids = []
+        self._slot_deps = ()
+
+
+# ---------------------------------------------------------------------------
+# Collective expansion + backend comparison
+# ---------------------------------------------------------------------------
+
+
+def expand_collective(op: str, algorithm: str, P: int, nbytes: int,
+                      topology: Topology | None = None, reduction="add",
+                      depth: int = 1) -> FlowTransport:
+    """Run one collective on a fresh :class:`FlowTransport` and return the
+    transport (``.flows`` is the expansion, ``.finish_time()`` the emergent
+    time).  ``nbytes`` follows the :func:`repro.core.models.round_schedule`
+    convention: full per-rank payload for allreduce/bcast/reduce/scan, full
+    logical buffer (P × chunk) for the scatter/gather family."""
+    from . import algorithms as A
+
+    P = int(P)
+    t = FlowTransport(P, topology=topology)
+    itemsize = 4
+    per = max(1, int(nbytes) // itemsize)
+    per += (-per) % P  # chunked algorithms need P | elements (collectives pad)
+    chunk = max(1, int(nbytes) // itemsize // P)
+
+    if depth > 1 and algorithm in A.PIPELINED.get(op, {}):
+        fn = A.PIPELINED[op][algorithm]
+        if op == "allreduce":
+            fn(t, t.ones((per,), np.float32), reduction, depth=depth)
+        else:  # reduce_scatter
+            fn(t, t.ones((chunk * P,), np.float32), reduction, depth=depth)
+        return t
+
+    fn = A.ALGORITHMS[op][algorithm]
+    if op in ("allreduce", "scan"):
+        fn(t, t.ones((per,), np.float32), reduction)
+    elif op == "reduce_scatter":
+        fn(t, t.ones((chunk * P,), np.float32), reduction)
+    elif op == "bcast":
+        fn(t, t.ones((per,), np.float32), 0)
+    elif op == "reduce":
+        fn(t, t.ones((per,), np.float32), reduction, 0)
+    elif op in ("allgather", "gather"):
+        fn(t, t.ones((chunk,), np.float32))
+    elif op == "alltoall":
+        fn(t, t.ones((P, chunk), np.float32))
+    elif op == "scatter":
+        fn(t, t.ones((P, chunk), np.float32), 0)
+    elif op == "barrier":
+        fn(t)
+    else:
+        raise KeyError(f"no expansion for op {op!r}")
+    return t
+
+
+def flow_time(op: str, algorithm: str, nbytes: int, P: int,
+              topology: Topology | None = None, depth: int = 1) -> float:
+    """Emergent flow-simulated completion time of one collective."""
+    return expand_collective(op, algorithm, P, nbytes, topology=topology,
+                             depth=depth).finish_time()
+
+
+@dataclass(frozen=True)
+class BackendComparison:
+    """One modeled-vs-flow data point (``dryrun --explain``'s divergence
+    column, the bench artifact's scenario rows)."""
+
+    op: str
+    algorithm: str
+    nbytes: int
+    P: int
+    channel: str
+    topology: str
+    modeled_s: float
+    flow_s: float
+    depth: int = 1
+
+    @property
+    def divergence(self) -> float:
+        """Signed relative divergence ``(flow − modeled) / modeled``."""
+        if self.modeled_s <= 0:
+            return 0.0
+        return (self.flow_s - self.modeled_s) / self.modeled_s
+
+
+def compare_backends(op: str, algorithm: str, nbytes: int, P: int,
+                     channel: str = "sim", topology: Topology | None = None,
+                     depth: int = 1) -> BackendComparison:
+    """Price one collective with the α-β(+γ) model and with the flow
+    backend (topology derived from the channel spec unless given)."""
+    from .channels import get_channel
+
+    ch = get_channel(channel)
+    topo = topology if topology is not None else Topology.from_spec(ch.spec, P)
+    modeled = ch.time(op, algorithm, nbytes, P, depth=depth)
+    flow = flow_time(op, algorithm, nbytes, P, topology=topo, depth=depth)
+    return BackendComparison(op, algorithm, int(nbytes), int(P), channel,
+                             topo.name, modeled, flow, depth)

@@ -119,6 +119,16 @@ TPU_CHANNELS: dict[str, ChannelSpec] = {
         "sim", alpha=5e-6, beta=1 / (16 * GB), kind="direct", push=True,
         notes="instrumented numpy lockstep channel (test/cost oracle)",
     ),
+    # Flow-level simulation backend: same wire constants as "sim" (so the
+    # two backends price identically under the α-β model), but the transport
+    # expands every message into per-link flows and completion times emerge
+    # from max-min fair sharing (repro.core.flowsim).  Registered private —
+    # it is a validation instrument, not a selector candidate.
+    "flow": ChannelSpec(
+        "flow", alpha=5e-6, beta=1 / (16 * GB), kind="direct", push=True,
+        notes="flow-level network simulation backend (emergent contention; "
+        "see repro.core.flowsim)",
+    ),
 }
 
 CHANNELS: dict[str, ChannelSpec] = {**PAPER_CHANNELS, **TPU_CHANNELS}

@@ -26,7 +26,8 @@ channel there makes it a selector candidate with no change here.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Mapping
 
 from .channels import default_channels, get_channel
 from .models import (
@@ -148,6 +149,7 @@ def candidates(
     inner_P: int | None = None,
     depths: tuple[int, ...] = PIPELINE_DEPTHS,
     hierarchical: bool = True,
+    calibration: "Calibration | None" = None,
 ) -> list[Candidate]:
     if channels is None:
         channels = default_channels()
@@ -156,6 +158,9 @@ def candidates(
         out.extend(_flat_candidates(op, nbytes, P, ch_name, mem_gib, depths))
     if hierarchical and len(channels) > 1:
         out.extend(_hier_candidates(op, nbytes, P, channels, inner_P, mem_gib))
+    if calibration is not None:
+        out = [replace(c, time_s=calibration.apply(c.channel, c.time_s))
+               for c in out]
     return out
 
 
@@ -168,8 +173,10 @@ def select(
     mem_gib: float = 2.0,
     price_weight: float = 0.5,
     inner_P: int | None = None,
+    calibration: "Calibration | None" = None,
 ) -> Candidate:
-    cands = candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P)
+    cands = candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P,
+                       calibration=calibration)
     if not cands:
         raise ValueError(f"no feasible algorithm for {op} with P={P} on {channels}")
     return min(cands, key=lambda c: c.objective(objective, price_weight))
@@ -227,6 +234,7 @@ def bucket_plan(
     bucket_sizes: tuple[int, ...] = BUCKET_SIZES,
     price_weight: float = 0.5,
     slowdown: float = 1.0,
+    calibration: "Calibration | None" = None,
 ) -> BucketPlan:
     """Choose the bucket size for coalescing a ``total_bytes`` payload that
     becomes ready incrementally (per-layer gradients) into fused collectives.
@@ -255,7 +263,7 @@ def bucket_plan(
         per_bucket = total / n  # even split (the scheduler pads the tail)
         cand = select(op, per_bucket, P, channels=channels,
                       objective=objective, mem_gib=mem_gib,
-                      price_weight=price_weight)
+                      price_weight=price_weight, calibration=calibration)
         t_bucket = cand.time_s * slowdown
         t = _exposed_time(n, t_bucket, compute_s)
         # occupancy pricing scales with actual wall time, so the slowdown
@@ -696,21 +704,201 @@ def explain(
     channels: tuple[str, ...] | None = None,
     mem_gib: float = 2.0,
     inner_P: int | None = None,
+    flow: bool = False,
+    calibration: "Calibration | None" = None,
 ) -> str:
     """The full candidate table, best first.  ``channels=None`` considers
     every registered channel with a transport (plus their hierarchical
-    composites) — the table ``dryrun.py --explain`` prints."""
+    composites) — the table ``dryrun.py --explain`` prints.
+
+    ``flow=True`` adds the modeled-vs-flow divergence columns: each flat
+    candidate is re-run on the flow-level backend
+    (:func:`repro.core.flowsim.flow_time`, topology derived from the
+    channel spec) and the signed relative divergence of the emergent time
+    from the α-β prediction is printed next to it.  Composite and
+    storage-priced rows have no flow expansion and show ``-``."""
     rows = sorted(
-        candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P),
+        candidates(op, nbytes, P, channels, mem_gib, inner_P=inner_P,
+                   calibration=calibration),
         key=lambda c: c.time_s,
     )
-    lines = [
-        f"{'channel':10s} {'algorithm':22s} {'depth':>5s} {'time':>12s} {'price $':>14s}",
-        "-" * 68,
-    ]
+    hdr = (f"{'channel':10s} {'algorithm':22s} {'depth':>5s} {'time':>12s} "
+           f"{'price $':>14s}")
+    if flow:
+        hdr += f" {'flow time':>12s} {'diverg.':>8s}"
+    lines = [hdr, "-" * (68 + (22 if flow else 0))]
     for c in rows:
+        line = (f"{c.channel:10s} {c.algorithm:22s} {c.depth:5d} "
+                f"{c.time_s*1e6:10.1f}us {c.price_usd:14.3e}")
+        if flow:
+            if c.hierarchical or c.algorithm == "storage":
+                line += f" {'-':>12s} {'-':>8s}"
+            else:
+                from .flowsim import compare_backends
+
+                cmpr = compare_backends(op, c.algorithm, int(nbytes), P,
+                                        channel=c.channel, depth=c.depth)
+                line += (f" {cmpr.flow_s*1e6:10.1f}us "
+                         f"{cmpr.divergence*100:+7.1f}%")
+        lines.append(line)
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Calibration — close the loop between the α-β model and the flow backend
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CalibrationSample:
+    """One sweep point: the α-β prediction next to the emergent flow time."""
+
+    channel: str
+    op: str
+    algorithm: str
+    nbytes: int
+    P: int
+    modeled_s: float
+    flow_s: float
+
+    @property
+    def ratio(self) -> float:
+        """``flow / modeled`` — the correction this point votes for."""
+        return self.flow_s / self.modeled_s
+
+
+@dataclass(frozen=True)
+class Calibration:
+    """Per-channel multiplicative corrections fitted against the flow
+    backend, plus the sweep they were fitted on.
+
+    ``scales[ch]`` is the **weighted median** of the per-sample ratios
+    ``r_i = flow_i / modeled_i`` with weights ``1/r_i``: the exact minimizer
+    of the mean relative error ``mean_i |s·m_i − f_i| / f_i`` over scalar
+    ``s`` (the objective is convex piecewise-linear in ``s`` with kinks at
+    the ``r_i``).  Because ``s = 1`` is always in the feasible set, the
+    corrected error can never exceed the uncorrected one — the property
+    ``tests/test_flowsim.py`` asserts — and a positive scale preserves the
+    model's monotonicity in ``nbytes``."""
+
+    scales: Mapping[str, float]
+    samples: tuple[CalibrationSample, ...]
+    mean_rel_err_before: float
+    mean_rel_err_after: float
+
+    def scale(self, channel: str) -> float:
+        """Correction for ``channel``; uncalibrated names get 1.0, and a
+        hierarchical composite ``"<inner>+<outer>"`` inherits the larger
+        leg's correction (congestion on either leg bounds the composite)."""
+        if channel in self.scales:
+            return float(self.scales[channel])
+        if "+" in channel:
+            return max(self.scale(p) for p in channel.split("+"))
+        return 1.0
+
+    def apply(self, channel: str, time_s: float) -> float:
+        return time_s * self.scale(channel)
+
+
+def _weighted_median(values: list[float], weights: list[float]) -> float:
+    order = sorted(range(len(values)), key=lambda i: values[i])
+    half = sum(weights) / 2.0
+    acc = 0.0
+    for i in order:
+        acc += weights[i]
+        if acc >= half:
+            return values[i]
+    return values[order[-1]]
+
+
+def _mean_rel_err(samples, scales: Mapping[str, float]) -> float:
+    if not samples:
+        return 0.0
+    errs = [abs(scales.get(s.channel, 1.0) * s.modeled_s - s.flow_s) / s.flow_s
+            for s in samples]
+    return sum(errs) / len(errs)
+
+
+def calibrate(
+    channels: tuple[str, ...] = ("sim",),
+    ops: tuple[str, ...] = ("allreduce", "reduce_scatter", "allgather"),
+    P_values: tuple[int, ...] = (4, 8),
+    nbytes_grid: tuple[int, ...] = (1 << 12, 1 << 15, 1 << 18, 1 << 21),
+    topology=None,
+) -> Calibration:
+    """Run the candidate sweep on both backends and fit per-channel
+    corrections.
+
+    For every channel × P × (op, feasible algorithm) × payload the α-β
+    model's prediction (:meth:`~repro.core.channels.Channel.time`, depth 1)
+    is paired with the emergent flow-simulated completion time
+    (:func:`repro.core.flowsim.flow_time`) on that channel's implied
+    topology — flat switch for direct channels, broker star for mediated
+    ones (:meth:`~repro.core.flowsim.Topology.from_spec`).  ``topology``
+    overrides the default: a callable receives ``(spec, P)`` and returns a
+    :class:`~repro.core.flowsim.Topology`; a plain topology instance is
+    used for every sweep point (single-P sweeps).
+
+    The fitted :class:`Calibration` plugs straight back into
+    :func:`select`/:func:`bucket_plan` via their ``calibration=`` parameter,
+    scaling every candidate's predicted time — the correction-feedback loop
+    the flow backend exists to close."""
+    from .flowsim import Topology, flow_time
+
+    samples: list[CalibrationSample] = []
+    for ch_name in channels:
+        ch = get_channel(ch_name)
+        for P in P_values:
+            if topology is None:
+                topo = Topology.from_spec(ch.spec, P)
+            elif callable(topology):
+                topo = topology(ch.spec, P)
+            else:
+                topo = topology
+            for op in ops:
+                for algo in DIRECT_ALGOS.get(op, []):
+                    if not feasible(op, algo, P):
+                        continue
+                    for nb in nbytes_grid:
+                        m = ch.time(op, algo, nb, P, depth=1)
+                        f = flow_time(op, algo, nb, P, topology=topo)
+                        if m > 0 and f > 0:
+                            samples.append(CalibrationSample(
+                                ch_name, op, algo, int(nb), P, m, f))
+    scales: dict[str, float] = {}
+    for ch_name in channels:
+        ss = [s for s in samples if s.channel == ch_name]
+        if not ss:
+            continue
+        ratios = [s.ratio for s in ss]
+        weights = [1.0 / r for r in ratios]
+        scales[ch_name] = _weighted_median(ratios, weights)
+    return Calibration(
+        scales=scales,
+        samples=tuple(samples),
+        mean_rel_err_before=_mean_rel_err(samples, {}),
+        mean_rel_err_after=_mean_rel_err(samples, scales),
+    )
+
+
+def explain_calibration(cal: Calibration) -> str:
+    """The calibration result as a table — per-channel correction and the
+    sweep-wide error cut — what ``dryrun --explain`` prints under the
+    divergence column."""
+    lines = [
+        f"flow-sim calibration: {len(cal.samples)} sweep points, "
+        f"mean |rel err| {cal.mean_rel_err_before*100:.1f}% -> "
+        f"{cal.mean_rel_err_after*100:.1f}%",
+        f"{'channel':10s} {'scale':>8s} {'points':>7s} "
+        f"{'err before':>11s} {'err after':>10s}",
+        "-" * 50,
+    ]
+    for ch in sorted(cal.scales):
+        ss = [s for s in cal.samples if s.channel == ch]
+        before = _mean_rel_err(ss, {})
+        after = _mean_rel_err(ss, cal.scales)
         lines.append(
-            f"{c.channel:10s} {c.algorithm:22s} {c.depth:5d} "
-            f"{c.time_s*1e6:10.1f}us {c.price_usd:14.3e}"
+            f"{ch:10s} {cal.scales[ch]:8.3f} {len(ss):7d} "
+            f"{before*100:10.1f}% {after*100:9.1f}%"
         )
     return "\n".join(lines)

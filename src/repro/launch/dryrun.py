@@ -446,10 +446,29 @@ def main():
         # oracle — plus their two-level hierarchical composites
         chans = ("ici", "xla", "host", "sim")
         print(f"grad-sync allreduce, {nbytes/1e6:.1f} MB/chip, 16 ranks:\n")
-        print(explain("allreduce", nbytes, 16, channels=chans))
+        # flow=True adds the modeled-vs-flow divergence column: every flat
+        # candidate re-run on the flow-level backend (emergent link
+        # contention over the channel's implied topology; docs/flowsim.md)
+        print(explain("allreduce", nbytes, 16, channels=chans, flow=True))
         best = select("allreduce", nbytes, 16, channels=chans)
         print(f"\nselected: {best.channel}/{best.algorithm} depth={best.depth} "
               f"({best.time_s*1e6:.1f}us, ${best.price_usd:.3e})")
+        # calibration: fit per-channel corrections against the flow backend
+        # on a quick sweep; selector.select/bucket_plan accept the result
+        # via calibration= to re-rank with corrected predictions
+        from ..core.selector import calibrate, explain_calibration
+
+        # cap the sweep at 4 MiB: expand_collective runs real stacked
+        # payloads, so P=16 points at the full 13 MB grad share cost
+        # minutes of array copies without changing the fitted scales
+        cal = calibrate(channels=("sim", "host"), P_values=(8, 16),
+                        nbytes_grid=(1 << 16, 1 << 20,
+                                     min(int(nbytes), 1 << 22)))
+        print(f"\n{explain_calibration(cal)}")
+        cbest = select("allreduce", nbytes, 16, channels=chans,
+                       calibration=cal)
+        print(f"calibrated pick: {cbest.channel}/{cbest.algorithm} "
+              f"depth={cbest.depth} ({cbest.time_s*1e6:.1f}us corrected)")
         # bucketed-overlap plan: how the CommScheduler would coalesce the
         # per-layer gradient requests, with the backward compute window the
         # roofline model predicts for this arch as the overlap budget

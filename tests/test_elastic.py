@@ -202,16 +202,25 @@ def _load_logical(ckpt_dir):
     return {k: np.asarray(v) for k, v in tree.items()}, step
 
 
+@pytest.mark.parametrize("backend", ["sim", "flow"])
 def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
-        tmp_path, shared_channel):
+        tmp_path, shared_channel, backend):
     """The acceptance test: rank 5 dies mid-flight inside step 5's bucketed
     allreduce; quiesce cancels the in-flight bucket, the controller regroups
     8 -> 4 (pow2 floor), reshards from the step-3 checkpoint, and the
     resumed trajectory is BIT-EXACT with a clean restart at world 4 from
-    the very same checkpoint."""
+    the very same checkpoint.
+
+    Runs on both software backends: the flow-level transport must heal
+    identically — same cancel accounting, same bit-exact trajectory —
+    since only its timing account differs (see docs/flowsim.md)."""
+    if backend == "flow":
+        from repro.core.flowsim import FlowTransport as make
+    else:
+        make = SimTransport
     name, box = shared_channel
     P, ckpt = 8, str(tmp_path / "ck")
-    box["t"] = SimTransport(P)
+    box["t"] = make(P)
     state = {
         "comm": Communicator(axes=("data",), sizes=(P,), channel=name),
     }
@@ -225,7 +234,7 @@ def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
         m.join(r)
 
     def rebuild(dp):
-        box["t"] = SimTransport(dp)
+        box["t"] = make(dp)
         state["comm"] = state["comm"].regroup(sizes=(dp,))
         state["sched"] = CommScheduler(state["comm"], mean=True,
                                        algorithm="recursive_doubling",
@@ -268,7 +277,7 @@ def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
     faulted = _sgd_steps(state["sched"], state["params"], range(3, 8))
 
     # clean restart: fresh world-4 stack from the SAME checkpoint
-    box["t"] = SimTransport(4)
+    box["t"] = make(4)
     comm2 = Communicator(axes=("data",), sizes=(4,), channel=name)
     sched2 = CommScheduler(comm2, mean=True, algorithm="recursive_doubling",
                            bucket_bytes=64)

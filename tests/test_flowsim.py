@@ -1,0 +1,462 @@
+"""Differential harness for the flow-level backend (repro.core.flowsim).
+
+Three layers of checks:
+
+1. **Differential correctness** — every collective algorithm x op x pow2
+   world of the tier-1 matrix runs on both ``SimTransport`` and
+   ``FlowTransport``; payloads must be bit-exact and the ChannelTrace
+   accounting identical.  The backend may change *time*, never *bytes*.
+2. **Event-loop semantics** — max-min fair sharing, dependency barriers,
+   emergent incast/hierarchy/multi-job contention, determinism, and the
+   golden-trace fixtures that freeze the ring / recursive-doubling flow
+   expansions at P=4.
+3. **Calibration sanity** — ``selector.calibrate`` corrections are monotone
+   in nbytes and never increase mean relative error vs the flow-simulated
+   times (the weighted-median fit guarantees both by construction; the
+   property tests keep the guarantee honest under refactors).
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as A
+from repro.core import channels as CH
+from repro.core.communicator import Communicator
+from repro.core.flowsim import (
+    Flow,
+    FlowTransport,
+    Topology,
+    co_schedule,
+    compare_backends,
+    expand_collective,
+    flow_time,
+    simulate,
+)
+from repro.core.models import CHANNELS, feasible
+from repro.core.selector import (
+    bucket_plan,
+    calibrate,
+    candidates,
+    explain,
+    explain_calibration,
+    select,
+)
+from repro.core.transport import RankFailure, SimTransport
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures")
+
+POW2_WORLDS = (1, 2, 4, 8, 16)
+CASES = [(op, algo) for op, algos in A.ALGORITHMS.items()
+         for algo in sorted(algos)]
+PIPE_CASES = [(op, algo) for op, algos in A.PIPELINED.items()
+              for algo in sorted(algos)]
+
+
+def _payload(op, P, seed=0):
+    rng = np.random.default_rng(seed + 101 * P)
+    if op == "allreduce":  # ring/rabenseifner chunk: need P | elements
+        return rng.normal(size=(P, P * 3)).astype(np.float32)
+    if op in ("bcast", "reduce", "scan"):
+        return rng.normal(size=(P, 8)).astype(np.float32)
+    if op == "reduce_scatter":
+        return rng.normal(size=(P, P * 3)).astype(np.float32)
+    if op in ("allgather", "gather"):
+        return rng.normal(size=(P, 3)).astype(np.float32)
+    if op in ("alltoall", "scatter"):
+        return rng.normal(size=(P, P, 2)).astype(np.float32)
+    if op == "barrier":
+        return None
+    raise KeyError(op)
+
+
+def _invoke(t, op, algo, x, reduction="add", depth=None):
+    table = A.PIPELINED if depth is not None else A.ALGORITHMS
+    fn = table[op][algo]
+    kw = {"depth": depth} if depth is not None else {}
+    if op in ("allreduce", "reduce_scatter", "scan"):
+        return fn(t, x, reduction, **kw)
+    if op == "reduce":
+        return fn(t, x, reduction, 0)
+    if op in ("bcast", "scatter"):
+        return fn(t, x, 0)
+    if op in ("allgather", "gather", "alltoall"):
+        return fn(t, x)
+    if op == "barrier":
+        return fn(t)
+    raise KeyError(op)
+
+
+# ---------------------------------------------------------------------------
+# 1. differential correctness: bytes and traces identical across backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("P", POW2_WORLDS)
+@pytest.mark.parametrize("op,algo", CASES)
+def test_differential_bit_exact_payloads(op, algo, P):
+    if not feasible(op, algo, P):
+        pytest.skip(f"{op}/{algo} infeasible at P={P}")
+    reductions = (("add", "max") if op in ("allreduce", "reduce",
+                                           "reduce_scatter", "scan")
+                  else ("add",))
+    for red in reductions:
+        x = _payload(op, P)
+        ts, tf = SimTransport(P), FlowTransport(P)
+        a = _invoke(ts, op, algo, None if x is None else x.copy(), red)
+        b = _invoke(tf, op, algo, None if x is None else x.copy(), red)
+        if a is not None:  # barrier returns nothing
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (op, algo, P, red)
+        # the trace accounting (rounds, bytes, slot structure) is the same
+        # object the α-β model prices — the flow backend must not perturb it
+        assert ts.trace.per_slot == tf.trace.per_slot, (op, algo, P, red)
+        assert ts.trace.rounds == tf.trace.rounds
+        assert ts.trace.bytes_per_rank == tf.trace.bytes_per_rank
+
+
+@pytest.mark.parametrize("depth", (2, 4))
+@pytest.mark.parametrize("P", (4, 8, 16))
+@pytest.mark.parametrize("op,algo", PIPE_CASES)
+def test_differential_bit_exact_pipelined(op, algo, P, depth):
+    x = np.random.default_rng(7 + P).normal(size=(P, P * 4)).astype(np.float32)
+    ts, tf = SimTransport(P), FlowTransport(P)
+    a = _invoke(ts, op, algo, x.copy(), "add", depth=depth)
+    b = _invoke(tf, op, algo, x.copy(), "add", depth=depth)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert ts.trace.per_slot == tf.trace.per_slot
+    assert ts.trace.serial_rounds == tf.trace.serial_rounds
+
+
+def test_flow_backend_through_requests_and_scheduler():
+    """The pending-slot contract survives: issuing through the request layer
+    on the flow backend merges slots exactly like the sim backend, and the
+    expanded flows share dependencies within a slot."""
+    P = 8
+    perm = [(i, (i + 1) % P) for i in range(P)]
+    x = np.ones((P, 16), np.float32)
+    ts, tf = SimTransport(P), FlowTransport(P)
+    for t in (ts, tf):
+        reqs = [t.ppermute_start(x, perm) for _ in range(4)]
+        for r in reqs:
+            r.wait()
+    assert ts.trace.per_slot == tf.trace.per_slot
+    assert ts.trace.serial_rounds == 1  # all four merged into one slot
+    # all flows of the merged slot share the same (empty) dependency set
+    assert {f.deps for f in tf.flows} == {()}
+    assert {f.slot for f in tf.flows} == {0}
+
+
+# ---------------------------------------------------------------------------
+# 2. event loop + topology semantics
+# ---------------------------------------------------------------------------
+
+
+def test_single_flow_matches_alpha_beta():
+    spec = CHANNELS["sim"]
+    topo = Topology.flat(2, bw=1.0 / spec.beta, latency_s=spec.alpha)
+    sched = simulate([Flow(0, 0, 1, 1 << 20, topo.route(0, 1))], topo)
+    assert sched.makespan == pytest.approx(spec.alpha + (1 << 20) * spec.beta)
+
+
+def test_shared_link_halves_rate():
+    topo = Topology.flat(3, bw=1e9, latency_s=0.0)
+    # two flows into the same destination: both cross down:2 -> fair share
+    flows = [Flow(0, 0, 2, 10 ** 9, topo.route(0, 2)),
+             Flow(1, 1, 2, 10 ** 9, topo.route(1, 2))]
+    sched = simulate(flows, topo)
+    assert sched.makespan == pytest.approx(2.0)
+    # a lone flow of the same size takes 1s
+    solo = simulate([flows[0]], topo)
+    assert solo.makespan == pytest.approx(1.0)
+
+
+def test_maxmin_unequal_shares():
+    """Water-filling, not equal split: a flow bottlenecked elsewhere frees
+    capacity for the others."""
+    topo = Topology("t", {"a": 1e9, "b": 0.25e9}, 0.0,
+                    lambda s, d: ())
+    flows = [
+        Flow(0, 0, 1, 10 ** 9, ("a",)),         # shares a
+        Flow(1, 0, 1, 10 ** 9, ("a", "b")),     # bottlenecked on b at 0.25
+    ]
+    sched = simulate(flows, topo)
+    # flow 1 gets 0.25 GB/s; flow 0 gets the remaining 0.75 GB/s
+    assert sched.finish[("job0", 1)] == pytest.approx(4.0)
+    assert sched.finish[("job0", 0)] < 4.0  # finished first, then 1 speeds up
+    # flow 0: 0.75 GB/s until done at t=4/3
+    assert sched.finish[("job0", 0)] == pytest.approx(4.0 / 3.0)
+
+
+def test_dependency_barrier_and_latency():
+    topo = Topology.flat(2, bw=1e9, latency_s=1e-3)
+    flows = [Flow(0, 0, 1, 10 ** 6, topo.route(0, 1)),
+             Flow(1, 1, 0, 10 ** 6, topo.route(1, 0), deps=(0,))]
+    sched = simulate(flows, topo)
+    t0 = 1e-3 + 1e-3  # latency + 1MB at 1GB/s
+    assert sched.finish[("job0", 0)] == pytest.approx(t0)
+    assert sched.finish[("job0", 1)] == pytest.approx(2 * t0)
+
+
+def test_dependency_cycle_raises():
+    topo = Topology.flat(2, bw=1e9, latency_s=0.0)
+    flows = [Flow(0, 0, 1, 10, topo.route(0, 1), deps=(1,)),
+             Flow(1, 1, 0, 10, topo.route(1, 0), deps=(0,))]
+    with pytest.raises(RuntimeError, match="cycle"):
+        simulate(flows, topo)
+
+
+def test_missing_dep_counts_as_finished():
+    # cancelled requests drop their flows; survivors referencing them run
+    topo = Topology.flat(2, bw=1e9, latency_s=0.0)
+    sched = simulate([Flow(5, 0, 1, 10 ** 6, topo.route(0, 1), deps=(3,))],
+                     topo)
+    assert sched.makespan == pytest.approx(1e-3)
+
+
+def test_loopback_and_zero_byte_flows():
+    topo = Topology.flat(2, bw=1e9, latency_s=1e-3)
+    sched = simulate([Flow(0, 1, 1, 1 << 20, topo.route(1, 1)),
+                      Flow(1, 0, 1, 0, topo.route(0, 1))], topo)
+    assert sched.makespan == pytest.approx(1e-3)  # both cost only activation
+
+
+def test_simulate_is_deterministic():
+    t = expand_collective("allreduce", "ring", 8, 1 << 16)
+    a, b = simulate(t.flows, t.topology), simulate(t.flows, t.topology)
+    assert a.finish == b.finish and a.makespan == b.makespan
+
+
+def test_broker_incast_emerges_on_star():
+    """The tentpole divergence scenario: one recursive-doubling round at P=8
+    moves 8 concurrent messages; the star topology funnels them through one
+    broker link, so the emergent time diverges from the α-β account (which
+    assumes contention-free rounds) by far more than 20%."""
+    P, nbytes = 8, 1 << 20
+    flat = flow_time("allreduce", "recursive_doubling", nbytes, P,
+                     Topology.flat(P, bw=16e9))
+    star = flow_time("allreduce", "recursive_doubling", nbytes, P,
+                     Topology.star(P, bw=16e9, broker_bw=16e9))
+    assert star / flat > 4.0
+    cmp = compare_backends("allreduce", "recursive_doubling", nbytes, P,
+                           channel="host")  # mediated spec -> star topology
+    assert cmp.divergence > 0.2
+
+
+def test_hierarchical_outer_uplink_contention():
+    P, inner = 8, 4
+    roomy = Topology.hierarchical(P, inner, inner_bw=16e9, outer_bw=16e9)
+    tight = Topology.hierarchical(P, inner, inner_bw=16e9, outer_bw=1e9)
+    nbytes = 1 << 20
+    fast = flow_time("allreduce", "recursive_doubling", nbytes, P, roomy)
+    slow = flow_time("allreduce", "recursive_doubling", nbytes, P, tight)
+    assert slow > fast * 2  # cross-group rounds choke on the shared uplinks
+
+
+def test_multi_job_interference_on_shared_topology():
+    P = 4
+    topo = Topology.flat(P, bw=1e9, latency_s=1e-7)  # bandwidth-dominated
+    jobs = []
+    for name in ("a", "b"):
+        t = FlowTransport(P, topology=topo, job=name)
+        A.ALGORITHMS["allreduce"]["ring"](
+            t, np.ones((P, 1 << 16), np.float32), "add")
+        jobs.append(t)
+    solo = jobs[0].finish_time()
+    shared = co_schedule(jobs, topo)
+    assert shared.job_makespan("a") > 1.5 * solo  # the links are shared
+    with pytest.raises(ValueError, match="distinct"):
+        co_schedule([jobs[0], jobs[0]], topo)
+
+
+def test_topology_from_spec_shapes():
+    flat = Topology.from_spec(CHANNELS["sim"], 4)
+    star = Topology.from_spec(CHANNELS["host"], 4)
+    assert "broker" not in flat.links and "broker" in star.links
+    assert flat.latency_s == CHANNELS["sim"].alpha
+    assert star.links["broker"] == pytest.approx(1.0 / CHANNELS["host"].beta)
+
+
+def test_topology_validation():
+    with pytest.raises(ValueError, match="bandwidth"):
+        Topology("bad", {"l": 0.0}, 0.0, lambda s, d: ("l",))
+    topo = Topology("t", {"l": 1e9}, 0.0, lambda s, d: ("ghost",))
+    with pytest.raises(KeyError, match="ghost"):
+        topo.route(0, 1)
+    with pytest.raises(ValueError, match="divide"):
+        Topology.hierarchical(8, 3)
+    with pytest.raises(ValueError, match="duplicate"):
+        simulate([Flow(0, 0, 1, 1, ()), Flow(0, 1, 0, 1, ())],
+                 Topology.flat(2))
+
+
+# ---------------------------------------------------------------------------
+# channel registry + backend switch + fault injection
+# ---------------------------------------------------------------------------
+
+
+def test_flow_channel_registered_private():
+    assert "flow" in CH.names()
+    assert "flow" not in CH.default_channels()  # never an auto candidate
+    t = CH.get_channel("flow").make_transport(size=4)
+    assert isinstance(t, FlowTransport)
+    comm = Communicator(axes=("data",), sizes=(4,), channel="flow")
+    out = comm.allreduce(np.ones((4, 8), np.float32), algorithm="ring")
+    assert np.array_equal(np.asarray(out), np.full((4, 8), 4, np.float32))
+
+
+def test_env_var_swaps_sim_backend(monkeypatch):
+    monkeypatch.setenv("FMI_SIM_BACKEND", "flow")
+    t = CH.get_channel("sim").make_transport(size=4)
+    assert isinstance(t, FlowTransport)
+    monkeypatch.delenv("FMI_SIM_BACKEND")
+    t = CH.get_channel("sim").make_transport(size=4)
+    assert type(t) is SimTransport
+
+
+def test_kill_revive_and_cancel_drop_flows():
+    t = FlowTransport(4)
+    perm = [(i, (i + 1) % 4) for i in range(4)]
+    x = np.ones((4, 4), np.float32)
+    t.kill(2, after_rounds=1)
+    t.ppermute(x, perm)
+    with pytest.raises(RankFailure) as e:
+        t.ppermute(x, perm)
+    assert e.value.rank == 2
+    t.revive(2)
+    n_before = len(t.flows)
+    req = t.ppermute_start(x, perm)
+    assert len(t.flows) == n_before + 4
+    assert req.cancel()
+    # cancelled exchange never crossed the wire: flows dropped, slot closed
+    assert len(t.flows) == n_before
+    assert t.trace.pending == 0
+    t.ppermute(x, perm)  # still healthy; fresh slot deps resolve fine
+    assert t.finish_time() > 0
+
+
+def test_reset_flows():
+    t = expand_collective("allreduce", "ring", 4, 1 << 12)
+    assert t.flows
+    t.reset_flows()
+    assert t.flows == [] and t.finish_time() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# golden-trace fixtures: the frozen expansions refactors must not drift
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("algo,fixture", [
+    ("ring", "flow_expansion_ring_p4.json"),
+    ("recursive_doubling", "flow_expansion_recursive_doubling_p4.json"),
+])
+def test_golden_flow_expansion(algo, fixture):
+    with open(os.path.join(FIXTURES, fixture)) as f:
+        want = json.load(f)
+    t = expand_collective(want["op"], algo, want["P"], want["nbytes"])
+    got = t.flows
+    assert len(got) == len(want["flows"])  # flow count
+    # per-slot (src, dst) multisets
+    def by_slot(rows):
+        slots = {}
+        for r in rows:
+            slots.setdefault(r["slot"], []).append((r["src"], r["dst"]))
+        return {s: sorted(p) for s, p in slots.items()}
+    got_rows = [{"fid": f.fid, "src": f.src, "dst": f.dst, "slot": f.slot,
+                 "deps": list(f.deps)} for f in got]
+    assert by_slot(got_rows) == by_slot(want["flows"])
+    # dependency edges
+    edges = lambda rows: sorted((r["fid"], d) for r in rows for d in r["deps"])
+    assert edges(got_rows) == edges(want["flows"])
+
+
+# ---------------------------------------------------------------------------
+# 3. calibration sanity (satellite property tests)
+# ---------------------------------------------------------------------------
+
+CAL_GRID = (1 << 12, 1 << 15, 1 << 18, 1 << 21)
+
+
+@settings(max_examples=6, deadline=None)
+@given(channel=st.sampled_from(["sim", "host"]),
+       star=st.booleans())
+def test_calibration_never_increases_mean_rel_error(channel, star):
+    topo_fn = ((lambda spec, P: Topology.star(P, bw=1 / spec.beta,
+                                              broker_bw=1 / spec.beta,
+                                              latency_s=spec.alpha))
+               if star else None)
+    cal = calibrate(channels=(channel,), P_values=(4, 8),
+                    nbytes_grid=CAL_GRID, topology=topo_fn)
+    assert cal.samples
+    assert cal.mean_rel_err_after <= cal.mean_rel_err_before + 1e-12
+    assert cal.scale(channel) > 0
+    assert cal.scale("nonexistent") == 1.0
+    # composite channels inherit the larger leg's correction
+    assert cal.scale(f"{channel}+nonexistent") == max(cal.scale(channel), 1.0)
+
+
+_CAL_CACHE = {}
+
+
+def _cached_cal():
+    if "cal" not in _CAL_CACHE:
+        _CAL_CACHE["cal"] = calibrate(channels=("sim", "host"),
+                                      P_values=(4, 8), nbytes_grid=CAL_GRID)
+    return _CAL_CACHE["cal"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(channel=st.sampled_from(["sim", "host", "ici"]),
+       op=st.sampled_from(["allreduce", "allgather"]),
+       P=st.sampled_from([4, 8]))
+def test_calibrated_predictions_monotone_in_nbytes(channel, op, P):
+    cal = _cached_cal()
+    algo = "recursive_doubling"
+    ch = CH.get_channel(channel)
+    prev = -1.0
+    for nb in sorted(CAL_GRID):
+        t = cal.apply(channel, ch.time(op, algo, nb, P))
+        assert t > prev, (channel, op, P, nb)
+        prev = t
+
+
+def test_calibration_star_sweep_cuts_error_2x():
+    """On a consistent contention regime (broker incast) the multiplicative
+    correction recovers most of the model's error — the acceptance bar the
+    divergence artifact also records."""
+    star = lambda spec, P: Topology.star(P, bw=1 / spec.beta,
+                                         broker_bw=1 / spec.beta,
+                                         latency_s=spec.alpha)
+    cal = calibrate(channels=("sim",), ops=("allreduce",), P_values=(8,),
+                    nbytes_grid=(1 << 18, 1 << 20, 1 << 22),
+                    topology=star)
+    assert cal.mean_rel_err_before >= 2.0 * cal.mean_rel_err_after
+
+
+def test_calibration_feeds_select_and_bucket_plan():
+    cal = calibrate(channels=("sim", "host"), P_values=(8,),
+                    nbytes_grid=(1 << 16, 1 << 20))
+    base = candidates("allreduce", 1 << 20, 8, ("sim", "host"))
+    corr = select("allreduce", 1 << 20, 8, channels=("sim", "host"),
+                  calibration=cal)
+    # the corrected pick is the argmin over per-channel-scaled predictions
+    want = min(cal.apply(c.channel, c.time_s) for c in base)
+    assert corr.time_s == pytest.approx(want)
+    plan = bucket_plan("allreduce", 1 << 24, 8, channels=("sim",),
+                       compute_s=1e-3, calibration=cal)
+    assert plan.bucket_bytes > 0 and plan.candidate.channel == "sim"
+    assert corr.op == "allreduce"
+
+
+def test_explain_prints_divergence_column_and_calibration_table():
+    out = explain("allreduce", 1 << 20, 8, channels=("sim", "host"),
+                  flow=True)
+    assert "diverg." in out and "%" in out
+    cal = calibrate(channels=("sim",), P_values=(4,),
+                    nbytes_grid=(1 << 16,))
+    table = explain_calibration(cal)
+    assert "scale" in table and "sim" in table

@@ -40,6 +40,7 @@ DOCTEST_MODULES = (
     "repro.core.algorithms",
     "repro.core.pricing",
     "repro.core.compression",
+    "repro.core.flowsim",
     "repro.core.selector",
     "repro.runtime.membership",
     "repro.runtime.straggler",
