@@ -5,6 +5,8 @@ derived notes the validated-against oracle instead."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -12,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops, ref
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "kernels")
 
 
 def _timed(fn, *args, reps=5):
@@ -70,4 +74,65 @@ def run():
         "kernels/quantize_blockwise/16MB", us_q,
         f"throughput={gbps:.2f}GBps wire_reduction=3.9x",
     ))
+
+    # paged decode attention off the page pool (serving hot path): the
+    # vectorized backend vs a per-(row, head) numpy gather loop — the same
+    # two paths the engine's --attn flag switches between.  Artifact for
+    # docs/kernels.md.
+    pa_cells = []
+    ps, hd, Hq, Hkv, npages_seq = 8, 32, 8, 4, 8
+    kv_head = np.arange(Hq, dtype=np.int32) // (Hq // Hkv)
+    for B in (8, 16, 32):
+        n_pages = B * npages_seq + 1
+        kp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+        vp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, hd)), jnp.float32)
+        tbl = jnp.asarray(np.stack([
+            rng.choice(n_pages, npages_seq, replace=False) for _ in range(B)
+        ]), jnp.int32)
+        ln = jnp.full((B,), npages_seq * ps, jnp.int32)
+        q = jnp.asarray(rng.normal(size=(B, Hq, hd)), jnp.float32)
+        us_pa = _timed(
+            lambda *a: ops.paged_attention(*a, backend="xla"),
+            q, kp, vp, tbl, ln,
+        )
+
+        kp_np, vp_np = np.asarray(kp), np.asarray(vp)
+        tbl_np, q_np = np.asarray(tbl), np.asarray(q)
+        sm = np.float32(hd ** -0.5)
+
+        def gather_loop():
+            out = np.zeros((B, Hq, hd), np.float32)
+            for b in range(B):
+                gk = kp_np[tbl_np[b]].reshape(npages_seq * ps, Hkv, hd)
+                gv = vp_np[tbl_np[b]].reshape(npages_seq * ps, Hkv, hd)
+                for h in range(Hq):
+                    kh = np.ascontiguousarray(gk[:, kv_head[h]])
+                    vh = np.ascontiguousarray(gv[:, kv_head[h]])
+                    s = kh @ q_np[b, h] * sm
+                    w = np.exp(s - s.max())
+                    out[b, h] = (w / w.sum()) @ vh
+            return out
+
+        t0 = time.perf_counter()
+        reps = 5
+        for _ in range(reps):
+            gather_loop()
+        us_gather = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((
+            f"kernels/paged_attention/B{B}", us_pa,
+            f"gather_loop={us_gather:.0f}us speedup={us_gather/us_pa:.1f}x "
+            f"T={npages_seq*ps} oracle_validated=interpret",
+        ))
+        pa_cells.append(dict(
+            batch=B, heads=Hq, kv_heads=Hkv, head_dim=hd, page_size=ps,
+            pages_per_seq=npages_seq, us_kernel=us_pa, us_gather=us_gather,
+            speedup=us_gather / us_pa,
+        ))
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "paged_attention.json"), "w") as f:
+        json.dump({"backend": "xla", "note":
+                   "pallas backend validated bitwise vs interpret oracle in "
+                   "tests/test_kernels.py; xla twin timed here (CPU)",
+                   "cells": pa_cells}, f, indent=1)
     return rows

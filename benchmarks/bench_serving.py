@@ -5,14 +5,25 @@ real continuous-batching engine (``serving/engine.py``) on the instrumented
 sim channel — admit/prefill/decode/evict with the per-step collectives of
 ``docs/serving.md`` — and reports:
 
-* measured wall-clock tokens/s of the lockstep simulation (sanity: the
-  engine really serves), plus the observed comm wait share,
+* measured steady-state tokens/s of the lockstep simulation (every cell
+  runs twice; the first run warms the jit cache for the cell's decode
+  shapes, the second is timed), plus the observed comm wait share,
 * the **modeled** decode-step latency and $/1M-tokens from
   ``selector.serve_plan`` on the same channel constants — the pair of
   numbers the model-driven story stands on (regime-aware channel +
   algorithm choice, priced per token),
 * trace totals (serialized slots vs raw messages: how much of the decode
   traffic overlapped admission prefills).
+
+Two extra sections exercise the paged-attention decode kernel
+(``docs/kernels.md``):
+
+* ``attn=kernel`` vs ``attn=gather`` at batch >= 8 — the kernel replaces
+  the per-(token, head) gather loop with one vectorized call over the page
+  pool, and wins exactly where batching amortizes the dispatch,
+* quantized KV tiers (``kv_dtype`` f32/bf16/int8) at fixed shape —
+  ``peak_kv_bytes`` (peak pages x page_nbytes per rank) shows the ~2x /
+  ~4x pool shrink that is the point of page quantization.
 
 An artifact JSON lands in ``benchmarks/artifacts/serving/serving.json``
 like the other benches' artifacts.
@@ -32,6 +43,8 @@ from repro.serving.tp_lm import TPServeConfig
 ART = os.path.join(os.path.dirname(__file__), "artifacts", "serving")
 WORLDS = (1, 2, 4)
 BATCHES = (2, 8)
+KERNEL_BATCHES = (8, 16)  # the kernel-vs-gather comparison rows
+KV_TIERS = ("f32", "bf16", "int8")
 MAX_NEW = 8
 PROMPT = 8
 
@@ -40,34 +53,42 @@ CFG = TPServeConfig(vocab_size=256, d_model=64, n_heads=4, head_dim=16,
                     ff_chunks=4)
 
 
-def _serve_once(world: int, batch: int) -> dict:
-    rng = np.random.default_rng(0)
-    with ContinuousBatchingEngine(CFG, world=world, max_slots=batch,
-                                  kv_pages=batch * 4, page_size=4,
-                                  seed=0) as eng:
-        for _ in range(2 * batch):
-            eng.submit(rng.integers(0, CFG.vocab_size, PROMPT),
-                       max_new=MAX_NEW)
-        t0 = time.perf_counter()
-        out = eng.run()
-        dt = time.perf_counter() - t0
-        assert len(out) == 2 * batch
-        plan = eng.serve_plan(prompt_len=PROMPT)
-        trace = eng.transport.trace
-        wait_s = sum(w for _, _, w in eng.comm_log)
-        return dict(
-            world=world, batch=batch,
-            tokens=eng.tokens_emitted, steps=eng.steps, wall_s=dt,
-            tok_per_s=eng.tokens_emitted / dt,
-            comm_wait_s=wait_s,
-            model_decode_step_s=plan.decode.step_s,
-            model_decode_usd_per_mtok=plan.decode.usd_per_mtok,
-            model_prefill_step_s=plan.prefill.step_s,
-            model_prefill_usd_per_mtok=plan.prefill.usd_per_mtok,
-            trace_rounds=trace.rounds,
-            trace_serial_rounds=trace.serial_rounds,
-            peak_pages=eng.kv.peak_in_use,
-        )
+def _serve_once(world: int, batch: int, kv_dtype: str = "f32",
+                attn: str = "gather") -> dict:
+    def _run() -> dict:
+        rng = np.random.default_rng(0)
+        with ContinuousBatchingEngine(CFG, world=world, max_slots=batch,
+                                      kv_pages=batch * 4, page_size=4,
+                                      seed=0, kv_dtype=kv_dtype,
+                                      attn_backend=attn) as eng:
+            for _ in range(2 * batch):
+                eng.submit(rng.integers(0, CFG.vocab_size, PROMPT),
+                           max_new=MAX_NEW)
+            t0 = time.perf_counter()
+            out = eng.run()
+            dt = time.perf_counter() - t0
+            assert len(out) == 2 * batch
+            plan = eng.serve_plan(prompt_len=PROMPT)
+            trace = eng.transport.trace
+            wait_s = sum(w for _, _, w in eng.comm_log)
+            return dict(
+                world=world, batch=batch, kv_dtype=kv_dtype, attn=attn,
+                tokens=eng.tokens_emitted, steps=eng.steps, wall_s=dt,
+                tok_per_s=eng.tokens_emitted / dt,
+                comm_wait_s=wait_s,
+                model_decode_step_s=plan.decode.step_s,
+                model_decode_usd_per_mtok=plan.decode.usd_per_mtok,
+                model_prefill_step_s=plan.prefill.step_s,
+                model_prefill_usd_per_mtok=plan.prefill.usd_per_mtok,
+                trace_rounds=trace.rounds,
+                trace_serial_rounds=trace.serial_rounds,
+                peak_pages=eng.kv.peak_in_use,
+                page_nbytes=eng.kv.page_nbytes,
+                peak_kv_bytes=eng.kv.peak_in_use * eng.kv.page_nbytes,
+            )
+
+    _run()  # warm the jit cache for this cell's decode shapes
+    return _run()
 
 
 def run():
@@ -84,6 +105,37 @@ def run():
                 f"model_$per_mtok={c['model_decode_usd_per_mtok']:.4f} "
                 f"slots={c['trace_serial_rounds']}/{c['trace_rounds']}",
             ))
+
+    # paged-attention kernel vs the gather loop, batch >= 8 (docs/kernels.md)
+    for batch in KERNEL_BATCHES:
+        pair = {}
+        for attn in ("gather", "kernel"):
+            c = _serve_once(2, batch, attn=attn)
+            cells.append(c)
+            pair[attn] = c
+        k, g = pair["kernel"], pair["gather"]
+        rows.append((
+            f"serving/attn_kernel/P2/batch{batch}",
+            k["wall_s"] * 1e6 / max(1, k["tokens"]),
+            f"tok/s={k['tok_per_s']:.0f} gather_tok/s={g['tok_per_s']:.0f} "
+            f"speedup={k['tok_per_s']/g['tok_per_s']:.2f}x",
+        ))
+
+    # quantized KV page tiers at fixed shape: pool bytes shrink 2x / ~4x
+    base = None
+    for kd in KV_TIERS:
+        c = _serve_once(2, 8, kv_dtype=kd, attn="kernel")
+        cells.append(c)
+        base = base or c
+        rows.append((
+            f"serving/kv_{kd}/P2/batch8",
+            c["wall_s"] * 1e6 / max(1, c["tokens"]),
+            f"tok/s={c['tok_per_s']:.0f} peak_pages={c['peak_pages']} "
+            f"peak_kv_bytes={c['peak_kv_bytes']} "
+            f"vs_f32={base['peak_kv_bytes']/c['peak_kv_bytes']:.1f}x "
+            f"model_$per_mtok={c['model_decode_usd_per_mtok']:.4f}",
+        ))
+
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "serving.json"), "w") as f:
         json.dump({"config": CFG.__dict__, "prompt": PROMPT,

@@ -357,7 +357,9 @@ class ServePhase:
 class ServePlan:
     """The serving cost model's answer for one engine shape: both regimes
     priced with the same α-β(+γ) channel models the selector uses
-    everywhere else."""
+    everywhere else.  ``kv_dtype`` is the engine's KV/emission storage tier;
+    ``kv_bytes_per_token`` the per-rank cache growth per decoded token
+    (what admission capacity scales with — int8 quarters it vs f32)."""
 
     P: int
     batch: int
@@ -367,6 +369,8 @@ class ServePlan:
     vocab_size: int
     prefill: ServePhase
     decode: ServePhase
+    kv_dtype: str = "f32"
+    kv_bytes_per_token: float = 0.0
 
 
 def serve_plan(
@@ -383,6 +387,7 @@ def serve_plan(
     peak_flops: float | None = None,
     mem_gib: float = 2.0,
     logits_mode: str = "gather",
+    kv_dtype: str = "f32",
 ) -> ServePlan:
     """Price one decode step and one prefill step of a TP-sharded server.
 
@@ -413,7 +418,16 @@ def serve_plan(
     ``12·L·D² + 2·D·V`` estimate) over ``P`` chips at ``peak_flops``
     (default v5e bf16); the dollar column is chip occupancy of the whole
     step — compute *and* exposed communication — so shaving the collective
-    time shows up directly in $/1M tokens."""
+    time shows up directly in $/1M tokens.
+
+    ``kv_dtype`` is the engine's quantization tier
+    (:data:`repro.serving.kv_cache.KV_ITEMSIZE`): the emission wire follows
+    it in the engine, so under ``logits_mode='gather'`` the logits
+    allgather payload shrinks with the tier (int8 → 4× smaller than f32),
+    and ``kv_bytes_per_token`` reports the per-rank cache footprint the
+    tier buys back.  The ``local-argmax`` 8-byte exchange is already
+    minimal and is priced unquantized."""
+    from ..serving.kv_cache import KV_ITEMSIZE
     from .models import V5E
     from .pricing import usd_per_mtok
 
@@ -422,6 +436,7 @@ def serve_plan(
     if flops_per_token is None:
         flops_per_token = 2.0 * (12 * n_layers * d_model * d_model
                                  + 2 * d_model * vocab_size)
+    kv_item = KV_ITEMSIZE[kv_dtype]
 
     def phase(name: str, tokens: int) -> ServePhase:
         # per-step payloads: `tokens` activation rows in flight at once
@@ -429,7 +444,8 @@ def serve_plan(
         if logits_mode == "local-argmax":
             ag_bytes = float(P * batch * 2 * itemsize)
         else:
-            ag_bytes = float(batch * vocab_size * itemsize)
+            # the engine quantizes the emission wire to the KV tier
+            ag_bytes = float(batch * vocab_size * kv_item)
         if P > 1:
             ar = select("allreduce", ar_bytes, P, channels=channels,
                         objective=objective, mem_gib=mem_gib)
@@ -447,9 +463,12 @@ def serve_plan(
                           compute_s, step_s, usd_step,
                           usd_per_mtok(P, step_s, tps))
 
+    # per-rank KV growth per decoded token: K+V across layers, head-sharded
+    kv_bpt = 2.0 * n_layers * d_model * kv_item / P
     return ServePlan(P, batch, prompt_len, d_model, n_layers, vocab_size,
                      prefill=phase("prefill", prompt_len),
-                     decode=phase("decode", 1))
+                     decode=phase("decode", 1),
+                     kv_dtype=kv_dtype, kv_bytes_per_token=kv_bpt)
 
 
 def explain_serve_plan(
@@ -505,6 +524,10 @@ def explain_serve_plan(
             f"{ph.tokens_per_step:.0f} tok/step, "
             f"${ph.usd_per_mtok:.4f}/1M tokens"
         )
+    lines.append(
+        f"-> kv: dtype {plan.kv_dtype}, "
+        f"{plan.kv_bytes_per_token:.0f} B/token/rank cache growth"
+    )
     return "\n".join(lines)
 
 

@@ -127,6 +127,77 @@ def flash_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+
+def _xla_paged_attention(q, k_pages, v_pages, table, lengths, k_scale,
+                         v_scale, kv_head, page_offset, sm_scale):
+    """Vectorized paged attention in pure jnp: gather the [B, H, npm, ps]
+    K/V blocks through the page table, mask, one softmax.  O(B·H·npm·ps·d)
+    live memory — fine for decode (one q row per sequence), and the
+    gather-style baseline the kernel's bench rows compare against."""
+    B, Hq, d = q.shape
+    n_pages, ps, Hkv, dv = v_pages.shape
+    npm = table.shape[1]
+    pages = table[:, None, :] + page_offset[None, :, None]  # [B, Hq, npm]
+    hsel = kv_head[None, :, None, None]  # broadcast over (B, ·, npm, ps)
+    kh = jnp.take_along_axis(k_pages[pages], hsel[..., None, None],
+                             axis=4)[..., 0, :].astype(jnp.float32)
+    vh = jnp.take_along_axis(v_pages[pages], hsel[..., None, None],
+                             axis=4)[..., 0, :].astype(jnp.float32)
+    ks = jnp.take_along_axis(k_scale[pages], hsel, axis=3)[..., 0]
+    vs = jnp.take_along_axis(v_scale[pages], hsel, axis=3)[..., 0]
+    s = jnp.einsum("bhd,bhpsd->bhps", q.astype(jnp.float32), kh)
+    s = s * (ks * sm_scale)[..., None]  # [B, Hq, npm, ps]
+    slot = (jnp.arange(npm) * ps)[:, None] + jnp.arange(ps)[None, :]
+    visible = slot[None, None] < lengths[:, None, None, None]
+    s = jnp.where(visible, s, NEG_INF)
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    p = jnp.where(visible, jnp.exp(s - m), 0.0)
+    pv = jnp.einsum("bhps,bhpsd->bhpd", p, vh)
+    pv = jnp.sum(pv * vs[..., None], axis=2)  # [B, Hq, dv]
+    l = jnp.sum(p, axis=(-2, -1))[..., None]
+    return (pv / jnp.maximum(l, 1e-30)).astype(q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "backend"))
+def paged_attention(q, k_pages, v_pages, table, lengths, k_scale=None,
+                    v_scale=None, kv_head=None, page_offset=None,
+                    sm_scale=None, backend="auto"):
+    """Decode attention off the paged KV pool (see
+    :func:`repro.kernels.paged_attention.paged_attention` for the layout
+    contract).  ``xla`` is a vectorized gather-style jnp baseline."""
+    from . import paged_attention as _pa
+
+    if backend == "auto":
+        backend = _default_backend()
+    B, Hq, d = q.shape
+    n_pages, ps, Hkv, dv = v_pages.shape
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    if backend == "xla":
+        if k_scale is None:
+            k_scale = jnp.ones((n_pages, Hkv), jnp.float32)
+        if v_scale is None:
+            v_scale = jnp.ones((n_pages, Hkv), jnp.float32)
+        if kv_head is None:
+            kv_head = jnp.arange(Hq, dtype=jnp.int32) // (Hq // Hkv)
+        if page_offset is None:
+            page_offset = jnp.zeros((Hq,), jnp.int32)
+        return _xla_paged_attention(q, k_pages, v_pages,
+                                    table.astype(jnp.int32),
+                                    lengths.astype(jnp.int32), k_scale,
+                                    v_scale, kv_head.astype(jnp.int32),
+                                    page_offset.astype(jnp.int32), sm_scale)
+    return _pa.paged_attention(
+        q, k_pages, v_pages, table, lengths, k_scale=k_scale,
+        v_scale=v_scale, kv_head=kv_head, page_offset=page_offset,
+        sm_scale=sm_scale, interpret=(backend == "interpret"),
+    )
+
+
+# ---------------------------------------------------------------------------
 # gated linear attention scan
 # ---------------------------------------------------------------------------
 

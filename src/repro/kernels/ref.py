@@ -52,6 +52,79 @@ def attention(
 
 
 # ---------------------------------------------------------------------------
+# paged decode attention (oracle for kernels/paged_attention.py)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,  # [B, Hq, d]
+    k_pages: jax.Array,  # [n_pages, page_size, Hkv, d]
+    v_pages: jax.Array,  # [n_pages, page_size, Hkv, dv]
+    table: jax.Array,  # [B, npm] i32
+    lengths: jax.Array,  # [B] i32
+    k_scale: jax.Array | None = None,  # [n_pages, Hkv] f32
+    v_scale: jax.Array | None = None,  # [n_pages, Hkv] f32
+    kv_head=None,  # [Hq] i32 (None = GQA h // group)
+    page_offset=None,  # [Hq] i32 (None = zeros)
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Blocked-recurrence oracle for the paged-attention kernel: the same
+    page-at-a-time online softmax, written as plain per-(row, head) jnp.
+    Masked page tails contribute exact ``+0.0``; quantized pages dequantize
+    through the identical scalar-multiply factoring."""
+    import numpy as np
+
+    B, Hq, d = q.shape
+    n_pages, ps, Hkv, dv = v_pages.shape
+    npm = int(table.shape[1])
+    if sm_scale is None:
+        sm_scale = d**-0.5
+    if k_scale is None:
+        k_scale = jnp.ones((n_pages, Hkv), jnp.float32)
+    if v_scale is None:
+        v_scale = jnp.ones((n_pages, Hkv), jnp.float32)
+    if kv_head is None:
+        kv_head = np.arange(Hq) // (Hq // Hkv)
+    if page_offset is None:
+        page_offset = np.zeros(Hq, np.int64)
+    kv_head = np.asarray(kv_head, np.int64)
+    page_offset = np.asarray(page_offset, np.int64)
+    tbl = np.asarray(table, np.int64)
+    neg_inf = jnp.float32(-1e30)
+
+    out = np.zeros((B, Hq, dv), np.float32)
+    for b in range(B):
+        for h in range(Hq):
+            hk = int(kv_head[h])
+            m = neg_inf
+            l = jnp.float32(0.0)
+            acc = jnp.zeros((dv,), jnp.float32)
+            qh = q[b, h].astype(jnp.float32)
+            for p in range(npm):
+                page = int(tbl[b, p]) + int(page_offset[h])
+                k = k_pages[page, :, hk].astype(jnp.float32)
+                v = v_pages[page, :, hk].astype(jnp.float32)
+                visible = (p * ps + jnp.arange(ps)) < lengths[b]
+                s = jax.lax.dot_general(
+                    k, qh, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ) * (k_scale[page, hk] * jnp.float32(sm_scale))
+                s = jnp.where(visible, s, neg_inf)
+                m_new = jnp.maximum(m, jnp.max(s))
+                alpha = jnp.exp(m - m_new)
+                pr = jnp.exp(s - m_new)
+                pr = jnp.where(visible, pr, 0.0)
+                l = l * alpha + jnp.sum(pr)
+                acc = acc * alpha + jax.lax.dot_general(
+                    pr, v, (((0,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                ) * v_scale[page, hk]
+                m = m_new
+            out[b, h] = np.asarray(acc / jnp.maximum(l, 1e-30))
+    return jnp.asarray(out).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # gated linear attention / mLSTM / SSD scan
 # ---------------------------------------------------------------------------
 
@@ -124,3 +197,25 @@ def dequantize_blockwise(q: jax.Array, scale: jax.Array, block: int = 256):
     shape = q.shape
     qb = q.reshape(shape[:-1] + (shape[-1] // block, block)).astype(jnp.float32)
     return (qb * scale[..., None]).reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# per-(page, head) KV page quantization
+# ---------------------------------------------------------------------------
+
+
+def quantize_page(x: jax.Array):
+    """KV pages ``[n_pages, page_size, H, d]`` -> (int8 pages, f32 scales
+    ``[n_pages, H]``): one max-abs scale per (page, head) — the granularity
+    the paged-attention kernel dequantizes at (a scalar multiply per page
+    block).  Zero pages get scale 1.0 so they stay exact zeros."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(1, 3))  # [n_pages, H]
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale[:, None, :, None]), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_page(q: jax.Array, scale: jax.Array, out_dtype=jnp.float32):
+    """Inverse of :func:`quantize_page` (per-(page, head) scales)."""
+    return (q.astype(jnp.float32) * scale[:, None, :, None]).astype(out_dtype)

@@ -64,12 +64,14 @@ def _explain(cfg, args) -> None:
     with ContinuousBatchingEngine(
         scfg, world=args.tp, max_slots=args.batch, kv_pages=args.kv_pages,
         page_size=args.page_size, logits_mode=args.logits_mode,
+        kv_dtype=args.kv_dtype, attn_backend=args.attn,
     ) as eng:
         print(explain_serve_plan(
             scfg.d_model, scfg.n_layers, scfg.vocab_size, P=args.tp,
             batch=args.batch, prompt_len=args.prompt_len,
             channels=(eng.channel,), logits_mode=args.logits_mode,
-            flops_per_token=scfg.flops_per_token))
+            flops_per_token=scfg.flops_per_token,
+            kv_dtype=args.kv_dtype))
 
 
 def _run_continuous(cfg, args) -> None:
@@ -78,7 +80,8 @@ def _run_continuous(cfg, args) -> None:
     with ContinuousBatchingEngine(
         scfg, world=args.tp, max_slots=args.batch, kv_pages=args.kv_pages,
         page_size=args.page_size, seed=args.seed,
-        logits_mode=args.logits_mode,
+        logits_mode=args.logits_mode, kv_dtype=args.kv_dtype,
+        attn_backend=args.attn,
     ) as eng:
         for _ in range(args.requests):
             plen = int(rng.integers(max(1, args.prompt_len // 2),
@@ -112,7 +115,9 @@ def _run_continuous(cfg, args) -> None:
         print(f"served {len(eng.finished)} requests / {toks} tokens in "
               f"{dt:.2f}s ({toks/dt:.1f} tok/s greedy, tp={eng.world} "
               f"sim ranks, {heals} heal(s), comm wait {waits*1e3:.1f}ms, "
-              f"peak pages {eng.kv.peak_in_use}/{eng.kv.n_pages})")
+              f"peak pages {eng.kv.peak_in_use}/{eng.kv.n_pages} "
+              f"[{args.kv_dtype}: {eng.kv.peak_in_use*eng.kv.page_nbytes}"
+              f" B/rank], attn={args.attn})")
 
 
 def _run_wave(cfg, args) -> None:
@@ -157,6 +162,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--logits-mode", choices=["gather", "local-argmax"],
                     default="gather")
+    ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8", "fp8"],
+                    default="f32",
+                    help="KV page storage tier (int8: 4x smaller pages, "
+                    "per-(page, head) scales; emission wire follows)")
+    ap.add_argument("--attn", choices=["gather", "kernel"],
+                    default="gather",
+                    help="decode attention backend: gather-and-pad numpy "
+                    "path, or the Pallas paged-attention kernel reading "
+                    "the page pool in place")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--kill-rank", type=int, default=None,
                     help="inject a rank failure mid-decode (elastic demo)")

@@ -227,15 +227,25 @@ class ContinuousBatchingEngine:
                  max_slots: int = 4, kv_pages: int = 64, page_size: int = 8,
                  params: dict | None = None, seed: int = 0,
                  logits_mode: str = "gather", max_new_default: int = 16,
-                 objective: str = "time", strategy: str = "pow2_floor"):
+                 objective: str = "time", strategy: str = "pow2_floor",
+                 kv_dtype: str = "f32", attn_backend: str = "gather",
+                 wire_dtype: str | None = None):
         from ..core import channels as CH
         from ..core.models import ChannelSpec
         from ..runtime import ElasticController, Membership
+        from .kv_cache import KV_ITEMSIZE
 
         self.cfg = cfg if cfg is not None else TPServeConfig()
         self.cfg.validate_world(world)
         if logits_mode not in ("gather", "local-argmax"):
             raise ValueError(f"unknown logits_mode {logits_mode!r}")
+        if kv_dtype not in KV_ITEMSIZE:
+            raise ValueError(f"unknown kv_dtype {kv_dtype!r}")
+        # the emission wire follows the KV tier unless pinned explicitly —
+        # a quantized cache usually wants the quantized allgather too
+        self.kv_dtype = kv_dtype
+        self.wire_dtype = kv_dtype if wire_dtype is None else wire_dtype
+        tp_lm._wire_codec(self.wire_dtype)  # validate eagerly
         self.max_slots = int(max_slots)
         self.kv_pages = int(kv_pages)
         self.page_size = int(page_size)
@@ -245,6 +255,8 @@ class ContinuousBatchingEngine:
         self.logical = params if params is not None else tp_lm.init_params(
             self.cfg, seed)
         self.weights = tp_lm.split_weights(self.logical, self.cfg)
+        self.decoder = tp_lm.TPDecoder(self.weights, self.cfg,
+                                       attn_backend=attn_backend)
 
         self.queue = RequestQueue()
         self.comm_log: list = []  # (op, nbytes, wait_s) per drained request
@@ -346,6 +358,7 @@ class ContinuousBatchingEngine:
             self.cfg.n_layers, self.kv_pages, self.page_size,
             heads_local=self.cfg.n_heads // world,
             head_dim=self.cfg.head_dim, world=world,
+            kv_dtype=self.kv_dtype,
         )
 
     # -- request intake -----------------------------------------------------
@@ -385,15 +398,16 @@ class ContinuousBatchingEngine:
     def _emit(self, shard) -> "object":
         """Issue the token-emission collective for a logits shard."""
         if self.logits_mode == "gather":
-            req = tp_lm.gather_logits(self.comm, shard, self.queue)
+            req = tp_lm.gather_logits(self.comm, shard, self.queue,
+                                      wire=self.wire_dtype)
             return req, lambda out: np.argmax(out[0], axis=-1)
         req = tp_lm.local_argmax(self.comm, shard, self.queue)
         return req, lambda out: out[0]
 
     def _forward(self, sids, tokens, positions):
-        return tp_lm.forward_tokens(
-            self.weights, self.cfg, self.comm, self.kv, sids, tokens,
-            positions, queue=self.queue, comm_log=self.comm_log,
+        return self.decoder.forward(
+            self.comm, self.kv, sids, tokens, positions,
+            queue=self.queue, comm_log=self.comm_log,
         )
 
     def step(self) -> list[int]:
@@ -542,5 +556,6 @@ class ContinuousBatchingEngine:
             batch=self.max_slots, prompt_len=prompt_len,
             channels=(self.channel,), objective=self.objective,
             flops_per_token=self.cfg.flops_per_token,
-            logits_mode=self.logits_mode, **kwargs,
+            logits_mode=self.logits_mode,
+            kv_dtype=kwargs.pop("kv_dtype", self.kv_dtype), **kwargs,
         )

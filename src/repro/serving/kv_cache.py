@@ -21,7 +21,18 @@ transplanted to the FMI setting).  This module owns that bookkeeping:
   sequence — together with the engine's token log this forms the
   **KV-page manifest** the elastic runtime replays from after a rank dies
   mid-decode (the dead rank's head-shard pages are gone; survivors re-prefill
-  from the manifest at the new, coarser sharding).
+  from the manifest at the new, coarser sharding);
+* pages can be stored **quantized** (``kv_dtype='int8'``, plus a ``'fp8'``
+  scaffold and a ``'bf16'`` half-memory tier): int8 pages carry one
+  per-(page, head) max-abs f32 scale in :attr:`PagedKVCache.k_scale` /
+  :attr:`~PagedKVCache.v_scale`, set **once** by the page-opening token
+  (later tokens clip to that grid).  The write-once policy is what keeps a
+  quantized decode replayable bit-for-bit: an incremental decode and a
+  batched manifest re-prefill quantize every token against the *same*
+  scale, so the pool bytes — and hence the healed trajectory — are
+  identical (a rescale-as-the-page-grows policy would double-round old
+  tokens and break ``decode ≡ replay``).  The paged-attention kernel
+  dequantizes inside its epilogue (``docs/kernels.md``).
 
 Example — two sequences through one pool::
 
@@ -42,14 +53,29 @@ Example — two sequences through one pool::
     >>> kv.append(7, k, k)              # prefill 3 tokens
     >>> kv.length(7), kv.capacity(7)
     (3, 12)
-    >>> kv.gather(7)[0].shape           # padded to the page reservation
+    >>> kv.gather(7, pad=True)[0].shape  # padded to the page reservation
     (1, 1, 16, 2, 4)
+    >>> kv.table(7, width=3)            # page-table row (padded with id 0)
+    array([0, 1, 0], dtype=int32)
     >>> kv.manifest_entry(7)
     {'pages': (0, 1), 'length': 3, 'capacity': 12}
     >>> kv.free(7)
     2
     >>> kv.free_pages
     3
+
+Quantized pool — 4x smaller pages, scales ride alongside::
+
+    >>> kv8 = PagedKVCache(layers=1, n_pages=2, page_size=4, heads_local=2,
+    ...                    head_dim=4, world=1, kv_dtype="int8")
+    >>> _ = kv8.alloc(0, capacity=4)
+    >>> kv8.append(0, k[:, :, :1] * 2.0, k[:, :, :1] * 2.0)
+    >>> int(kv8.k_pool[0, 0, 0, 0, 0, 0])   # 2.0 on a max-abs-2.0 grid
+    127
+    >>> float(kv8.gather(0, pad=True)[0][0, 0, 0, 0, 0])  # dequantized
+    2.0
+    >>> kv8.page_nbytes < kv.page_nbytes / 3   # ~4x (minus the scale rows)
+    True
 """
 
 from __future__ import annotations
@@ -60,6 +86,42 @@ from typing import Any
 import numpy as np
 
 from ..analysis.sanitizer import get_active as _sanitizer
+
+#: Storage dtypes a pool can hold.  ``bf16``/``fp8`` need :mod:`ml_dtypes`
+#: (a jax dependency); ``fp8`` is a scaffold — stored as direct e4m3 casts
+#: with unit scales, exercised by tests but not yet tuned for quality.
+KV_ITEMSIZE = {"f32": 4, "bf16": 2, "int8": 1, "fp8": 1}
+
+
+def kv_storage_dtype(kv_dtype: str):
+    """The numpy dtype backing one ``kv_dtype`` tier."""
+    if kv_dtype == "f32":
+        return np.float32
+    if kv_dtype == "int8":
+        return np.int8
+    import ml_dtypes
+
+    if kv_dtype == "bf16":
+        return ml_dtypes.bfloat16
+    if kv_dtype == "fp8":
+        return ml_dtypes.float8_e4m3fn
+    raise ValueError(f"unknown kv_dtype {kv_dtype!r} "
+                     f"(expected one of {sorted(KV_ITEMSIZE)})")
+
+
+def _absmax_scale(x: np.ndarray) -> np.ndarray:
+    """Per-(…, head) int8 scale over the trailing head_dim axis: max-abs
+    over the vector, mapped to the int8 grid (zero vectors get scale 1.0 so
+    they stay exact zeros).  The single definition both the per-head write
+    path and the batched append use — identical ops, identical bits."""
+    amax = np.abs(np.asarray(x, np.float32)).max(axis=-1)
+    return np.where(amax > 0, amax / np.float32(127.0),
+                    np.float32(1.0)).astype(np.float32)
+
+
+def _quant_i8(x: np.ndarray, scale) -> np.ndarray:
+    """Snap values to an already-fixed int8 grid (round-half-even, clip)."""
+    return np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
 
 
 class OutOfPages(RuntimeError):
@@ -117,7 +179,7 @@ class PagedKVCache:
 
     def __init__(self, layers: int, n_pages: int, page_size: int,
                  heads_local: int, head_dim: int, world: int,
-                 dtype=np.float32):
+                 kv_dtype: str = "f32"):
         if n_pages <= 0 or page_size <= 0:
             raise ValueError("n_pages and page_size must be positive")
         self.layers = int(layers)
@@ -126,16 +188,42 @@ class PagedKVCache:
         self.heads_local = int(heads_local)
         self.head_dim = int(head_dim)
         self.world = int(world)
+        self.kv_dtype = str(kv_dtype)
+        storage = kv_storage_dtype(self.kv_dtype)
         shape = (self.layers, self.world, self.n_pages, self.page_size,
                  self.heads_local, self.head_dim)
-        self.k_pool = np.zeros(shape, dtype)
-        self.v_pool = np.zeros(shape, dtype)
+        self.k_pool = np.zeros(shape, storage)
+        self.v_pool = np.zeros(shape, storage)
+        # per-(layer, rank, page, head) dequant scales — unit for the
+        # unquantized tiers so every consumer can multiply unconditionally
+        sshape = (self.layers, self.world, self.n_pages, self.heads_local)
+        self.k_scale = np.ones(sshape, np.float32)
+        self.v_scale = np.ones(sshape, np.float32)
         self._free: list[int] = list(range(self.n_pages))
         self._seqs: dict[int, _Seq] = {}
         # accounting the admit/evict invariant tests pin down
         self.allocs = 0
         self.frees = 0
         self.peak_in_use = 0
+
+    @property
+    def quantized(self) -> bool:
+        """True for the integer-grid tiers (int8/fp8)."""
+        return self.kv_dtype in ("int8", "fp8")
+
+    @property
+    def itemsize(self) -> int:
+        """Bytes per stored K/V element."""
+        return KV_ITEMSIZE[self.kv_dtype]
+
+    @property
+    def page_nbytes(self) -> int:
+        """Per-rank bytes of one page's K+V storage (plus its scale rows
+        when quantized) — what ``peak_pages`` converts to a byte footprint."""
+        data = 2 * self.page_size * self.heads_local * self.head_dim * \
+            self.itemsize
+        scales = 2 * self.heads_local * 4 if self.quantized else 0
+        return data + scales
 
     # -- allocation ---------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -180,8 +268,10 @@ class PagedKVCache:
         reuse never sees stale keys).  Returns the number of pages freed."""
         seq = self._seqs.pop(seq_id)
         for p in seq.pages:
-            self.k_pool[:, :, p] = 0.0
-            self.v_pool[:, :, p] = 0.0
+            self.k_pool[:, :, p] = 0
+            self.v_pool[:, :, p] = 0
+            self.k_scale[:, :, p] = 1.0
+            self.v_scale[:, :, p] = 1.0
         self._free.extend(seq.pages)
         self.frees += 1
         s = _sanitizer()
@@ -195,6 +285,48 @@ class PagedKVCache:
         for t in range(start, start + n):
             yield seq.pages[t // self.page_size], t % self.page_size
 
+    def _store_tok(self, page: int, off: int, k_tok: np.ndarray,
+                   v_tok: np.ndarray) -> None:
+        """Write one token's K/V (``[..., Hl, hd]``, any leading layer/rank
+        axes matching the pool slice) at (page, off), applying the
+        kv_dtype's storage policy.  int8: the page-opening token (off 0)
+        fixes the per-(page, head) scale; every token then snaps to that
+        grid — incremental decode and batched replay quantize identically."""
+        if self.kv_dtype == "int8":
+            if off == 0:
+                self.k_scale[..., page, :] = _absmax_scale(k_tok)
+                self.v_scale[..., page, :] = _absmax_scale(v_tok)
+            self.k_pool[..., page, off, :, :] = _quant_i8(
+                k_tok, self.k_scale[..., page, :, None])
+            self.v_pool[..., page, off, :, :] = _quant_i8(
+                v_tok, self.v_scale[..., page, :, None])
+        else:
+            # f32 exact; bf16/fp8 round-to-nearest casts (unit scales)
+            self.k_pool[..., page, off, :, :] = k_tok.astype(
+                self.k_pool.dtype)
+            self.v_pool[..., page, off, :, :] = v_tok.astype(
+                self.v_pool.dtype)
+
+    def write_kv(self, layer: int, rank: int, head: int, page: int, off: int,
+                 k_vec: np.ndarray, v_vec: np.ndarray) -> None:
+        """Per-(layer, rank, head) write of one token's ``[hd]`` K/V pair —
+        the TP forward's entry point.  Same storage policy as
+        :meth:`append` (the int8 scale ops are elementwise, so the scalar
+        and batched paths produce identical bits)."""
+        if self.kv_dtype == "int8":
+            if off == 0:
+                self.k_scale[layer, rank, page, head] = _absmax_scale(k_vec)
+                self.v_scale[layer, rank, page, head] = _absmax_scale(v_vec)
+            self.k_pool[layer, rank, page, off, head] = _quant_i8(
+                k_vec, self.k_scale[layer, rank, page, head])
+            self.v_pool[layer, rank, page, off, head] = _quant_i8(
+                v_vec, self.v_scale[layer, rank, page, head])
+        else:
+            self.k_pool[layer, rank, page, off, head] = np.asarray(
+                k_vec).astype(self.k_pool.dtype)
+            self.v_pool[layer, rank, page, off, head] = np.asarray(
+                v_vec).astype(self.v_pool.dtype)
+
     def append(self, seq_id: int, k: np.ndarray, v: np.ndarray) -> None:
         """Write ``T`` new tokens' K/V (``[L, P, T, Hl, hd]``) at the
         sequence's current length."""
@@ -206,33 +338,67 @@ class PagedKVCache:
                 f"(length {seq.length})"
             )
         for i, (page, off) in enumerate(self._slots(seq, seq.length, T)):
-            self.k_pool[:, :, page, off] = k[:, :, i]
-            self.v_pool[:, :, page, off] = v[:, :, i]
+            self._store_tok(page, off, np.asarray(k[:, :, i], np.float32),
+                            np.asarray(v[:, :, i], np.float32))
         seq.length += T
 
-    def gather(self, seq_id: int,
-               layer: int | None = None) -> tuple[np.ndarray, np.ndarray]:
-        """Contiguous K and V of the sequence — ``[P, pages*page_size, Hl,
-        hd]`` for one ``layer``, or ``[L, P, ...]`` for all layers when
-        ``layer`` is None.  The forward pass gathers per layer (copying
-        every layer's pages inside the layer loop would be O(L²) traffic).
-        Positions beyond :meth:`length` are exact zeros — the attention
-        mask (not the gather) excludes them, and the fixed page-aligned
-        padding keeps the reduction shape identical between an incremental
-        decode and a manifest replay (the bit-exactness argument in
-        ``docs/serving.md``)."""
+    def _dequant_page(self, pool: np.ndarray, scale: np.ndarray,
+                      page: int, layer: int | None):
+        """One page of ``pool`` in f32, scales applied (unit for f32/bf16
+        — multiplying by exactly 1.0 is the IEEE identity, so the
+        unquantized gather is unchanged bit for bit)."""
+        if layer is None:  # [L, P, ps, Hl, hd] * [L, P, 1, Hl, 1]
+            return pool[:, :, page].astype(np.float32) * \
+                scale[:, :, page][:, :, None, :, None]
+        return pool[layer][:, page].astype(np.float32) * \
+            scale[layer][:, page][:, None, :, None]
+
+    def gather(self, seq_id: int, layer: int | None = None,
+               pad: bool = False):
+        """The sequence's K and V off the page table.
+
+        ``pad=False`` (default): **zero-copy views** — a pair of tuples,
+        one raw-storage-dtype view per page (``[P, page_size, Hl, hd]`` for
+        one ``layer``, ``[L, P, ...]`` for all).  No copy, no pad, no
+        dequantization: this is the introspection/bulk-export path (the
+        paged-attention kernel doesn't gather at all — it indexes the pool
+        in place through :meth:`table`).
+
+        ``pad=True``: the legacy contract — contiguous **dequantized f32**
+        arrays ``[P, pages*page_size, Hl, hd]`` (or ``[L, P, ...]``),
+        padded to the full page reservation.  Positions beyond
+        :meth:`length` are exact zeros — the attention mask (not the
+        gather) excludes them, and the fixed page-aligned padding keeps the
+        reduction shape identical between an incremental decode and a
+        manifest replay (the bit-exactness argument in ``docs/serving.md``).
+        """
         seq = self._seqs[seq_id]
-        if layer is None:
-            k = np.concatenate([self.k_pool[:, :, p] for p in seq.pages],
-                               axis=2)
-            v = np.concatenate([self.v_pool[:, :, p] for p in seq.pages],
-                               axis=2)
-        else:
-            k = np.concatenate([self.k_pool[layer][:, p] for p in seq.pages],
-                               axis=1)
-            v = np.concatenate([self.v_pool[layer][:, p] for p in seq.pages],
-                               axis=1)
+        axis = 2 if layer is None else 1
+        if not pad:
+            if layer is None:
+                return (tuple(self.k_pool[:, :, p] for p in seq.pages),
+                        tuple(self.v_pool[:, :, p] for p in seq.pages))
+            return (tuple(self.k_pool[layer][:, p] for p in seq.pages),
+                    tuple(self.v_pool[layer][:, p] for p in seq.pages))
+        k = np.concatenate([self._dequant_page(self.k_pool, self.k_scale,
+                                               p, layer)
+                            for p in seq.pages], axis=axis)
+        v = np.concatenate([self._dequant_page(self.v_pool, self.v_scale,
+                                               p, layer)
+                            for p in seq.pages], axis=axis)
         return k, v
+
+    def table(self, seq_id: int, width: int | None = None) -> np.ndarray:
+        """The sequence's page-id row ``[width] i32`` for the paged-attention
+        kernel, padded with page id 0 (pad columns are fully masked by the
+        kernel's length test, so any valid id works)."""
+        pages = self._seqs[seq_id].pages
+        width = len(pages) if width is None else int(width)
+        if width < len(pages):
+            raise ValueError(f"width {width} < {len(pages)} pages")
+        out = np.zeros(width, np.int32)
+        out[:len(pages)] = pages
+        return out
 
     def slot(self, seq_id: int, position: int) -> tuple[int, int]:
         """``(page, offset)`` of an absolute token ``position`` within the

@@ -212,9 +212,60 @@ def _attend_vec(qv, kh, vh, visible):
 # ---------------------------------------------------------------------------
 
 
+def _attend_kernel(kv, layer: int, q: np.ndarray, seq_ids,
+                   positions: np.ndarray) -> np.ndarray:
+    """Every (token, head) attention output of one layer in **one**
+    paged-attention kernel call straight off the stacked page pool.
+
+    The pool reshape ``[P, n_pages, ...] -> [P·n_pages, ...]`` is a view
+    (the lockstep driver's stacked-rank convention is contiguous), and head
+    ``h`` carries ``page_offset = (h // Hl)·n_pages`` with in-page head
+    ``h % Hl`` — so each global head reads exactly its owning rank's pool
+    region and the single call is bitwise identical to ``P`` per-rank
+    calls.  Rows and table width are padded to powers of two (dummy rows
+    have length 0 → exact-zero output; pad table columns are fully masked),
+    bounding the jit recompile count without touching any real row's bits.
+
+    Backend dispatch follows the kernel convention (``ops.paged_attention``
+    with ``backend='auto'``): the Pallas kernel on TPU, its vectorized-XLA
+    twin elsewhere.  Both are bitwise invariant to the world partitioning —
+    per (row, head) the gathered pages and reduction extents are identical
+    whatever ``P`` is — so the cross-world bit-exactness contract holds on
+    either backend.
+    """
+    from ..kernels import ops
+
+    B, T, H, hd = q.shape
+    P, Hl, ps = kv.world, kv.heads_local, kv.page_size
+    n = B * T
+    rows = 1 << (n - 1).bit_length()
+    np_max = max(kv.padded_len(seq_ids[b]) // ps for b in range(B))
+    npm = 1 << (np_max - 1).bit_length()
+    tables = np.zeros((rows, npm), np.int32)
+    lengths = np.zeros(rows, np.int32)
+    for b in range(B):
+        row_tbl = kv.table(seq_ids[b], width=npm)
+        for j in range(T):
+            tables[b * T + j] = row_tbl
+            lengths[b * T + j] = int(positions[b, j]) + 1
+    qrows = np.zeros((rows, H, hd), np.float32)
+    qrows[:n] = q.reshape(n, H, hd)
+    stack = lambda pool: pool[layer].reshape(  # noqa: E731
+        P * kv.n_pages, ps, Hl, kv.head_dim)
+    heads = np.arange(H, dtype=np.int32)
+    out = ops.paged_attention(
+        qrows, stack(kv.k_pool), stack(kv.v_pool), tables, lengths,
+        k_scale=kv.k_scale[layer].reshape(P * kv.n_pages, Hl),
+        v_scale=kv.v_scale[layer].reshape(P * kv.n_pages, Hl),
+        kv_head=heads % Hl, page_offset=(heads // Hl) * kv.n_pages,
+    )
+    return np.asarray(out)[:n].reshape(B, T, H, hd)
+
+
 def forward_tokens(weights, cfg: TPServeConfig, comm: Communicator, kv,
                    seq_ids, tokens: np.ndarray, positions: np.ndarray,
-                   queue=None, comm_log: list | None = None) -> np.ndarray:
+                   queue=None, comm_log: list | None = None,
+                   attn_backend: str = "gather") -> np.ndarray:
     """Run ``tokens [B, T]`` (T=1 for decode, T=prompt length for prefill)
     through the TP stack, writing each position's K/V into the paged cache
     at its absolute slot, and return the **local logits shard**
@@ -225,9 +276,20 @@ def forward_tokens(weights, cfg: TPServeConfig, comm: Communicator, kv,
     The two per-layer partial allreduces are issued nonblockingly through
     :meth:`~repro.core.communicator.Communicator.iallreduce`; ``comm_log``
     records ``(op, nbytes, wait_s)`` per drained request, mirroring
-    :attr:`repro.core.scheduler.CommScheduler.wait_trace`."""
+    :attr:`repro.core.scheduler.CommScheduler.wait_trace`.
+
+    ``attn_backend`` selects how attention reads the paged cache:
+    ``"gather"`` copies each sequence's pages into a contiguous padded
+    buffer and runs the per-(token, head) numpy path; ``"kernel"`` runs
+    :func:`repro.kernels.paged_attention.paged_attention` in place over the
+    page pool (no gather copy).  Either backend is bit-exact across world
+    sizes / replay *within itself*; the two backends agree to f32 roundoff
+    (different-but-equivalent softmax factorings), so emitted tokens match.
+    """
     P = comm.size
     cfg.validate_world(P)
+    if attn_backend not in ("gather", "kernel"):
+        raise ValueError(f"unknown attn_backend {attn_backend!r}")
     B, T = tokens.shape
     H, hd, D = cfg.n_heads, cfg.head_dim, cfg.d_model
     Hl = H // P
@@ -255,24 +317,36 @@ def forward_tokens(weights, cfg: TPServeConfig, comm: Communicator, kv,
                 page, off = kv.slot(seq_ids[b], int(positions[b, j]))
                 for h in range(H):
                     q[b, j, h] = hv @ lw["wq"][h]
-                    kv.k_pool[li, h // Hl, page, off, h % Hl] = hv @ lw["wk"][h]
-                    kv.v_pool[li, h // Hl, page, off, h % Hl] = hv @ lw["wv"][h]
+                    kv.write_kv(li, h // Hl, h % Hl, page, off,
+                                hv @ lw["wk"][h], hv @ lw["wv"][h])
         # -- attention + row-parallel output projection --------------------
+        # The paged kernel is a *decode* kernel (one query row per
+        # sequence): prefill (T > 1) keeps the gather path so ragged
+        # prompt lengths never mint fresh jit shapes — decode rows/table
+        # widths are pow2-padded from a tiny fixed set.
         partial = np.zeros((P, B, T, D), np.float32)
-        for b in range(B):
-            gk, gv = kv.gather(seq_ids[b], layer=li)  # [P, Tc, Hl, hd]
-            Tc = gk.shape[1]
-            slots = np.arange(Tc)
-            for j in range(T):
-                visible = slots <= int(positions[b, j])
-                outs = []
-                for h in range(H):
-                    kh = np.ascontiguousarray(gk[h // Hl, :, h % Hl])
-                    vh = np.ascontiguousarray(gv[h // Hl, :, h % Hl])
-                    a = _attend_vec(q[b, j, h], kh, vh, visible)
-                    outs.append(a @ lw["wo"][h])
-                for r in range(P):
-                    partial[r, b, j] = tree_sum(outs[r * Hl:(r + 1) * Hl])
+        if attn_backend == "kernel" and T == 1:
+            att = _attend_kernel(kv, li, q, seq_ids, positions)
+            for b in range(B):
+                for j in range(T):
+                    outs = [att[b, j, h] @ lw["wo"][h] for h in range(H)]
+                    for r in range(P):
+                        partial[r, b, j] = tree_sum(outs[r * Hl:(r + 1) * Hl])
+        else:
+            for b in range(B):
+                gk, gv = kv.gather(seq_ids[b], layer=li, pad=True)
+                Tc = gk.shape[1]  # [P, Tc, Hl, hd]
+                slots = np.arange(Tc)
+                for j in range(T):
+                    visible = slots <= int(positions[b, j])
+                    outs = []
+                    for h in range(H):
+                        kh = np.ascontiguousarray(gk[h // Hl, :, h % Hl])
+                        vh = np.ascontiguousarray(gv[h // Hl, :, h % Hl])
+                        a = _attend_vec(q[b, j, h], kh, vh, visible)
+                        outs.append(a @ lw["wo"][h])
+                    for r in range(P):
+                        partial[r, b, j] = tree_sum(outs[r * Hl:(r + 1) * Hl])
         x = x + waited(partial)
         # -- MLP: column-parallel up, row-parallel down over ff_chunks -----
         partial = np.zeros((P, B, T, D), np.float32)
@@ -297,26 +371,104 @@ def forward_tokens(weights, cfg: TPServeConfig, comm: Communicator, kv,
     return shard
 
 
+@dataclass
+class TPDecoder:
+    """The decode-side model bundle: split weights + config + attention
+    backend, with :meth:`forward` as the one entry point the serving engine
+    calls.  Exists so ``kv_dtype`` / ``attn_backend`` plumbing lives in one
+    object instead of threading through every ``forward_tokens`` call site
+    (the engine rebuilds its cache on heal but keeps the same decoder —
+    backend choice survives regrouping).
+
+    >>> import numpy as np
+    >>> from repro.core.communicator import Communicator
+    >>> cfg = TPServeConfig(vocab_size=64, d_model=16, n_heads=4, head_dim=4,
+    ...                     d_ff=32, n_layers=1, max_len=8, ff_chunks=4)
+    >>> dec = TPDecoder(split_weights(init_params(cfg, seed=0), cfg), cfg)
+    >>> dec.attn_backend
+    'gather'
+    """
+
+    weights: dict
+    cfg: TPServeConfig
+    attn_backend: str = "gather"
+
+    def __post_init__(self):
+        if self.attn_backend not in ("gather", "kernel"):
+            raise ValueError(f"unknown attn_backend {self.attn_backend!r}")
+
+    def forward(self, comm: Communicator, kv, seq_ids, tokens: np.ndarray,
+                positions: np.ndarray, queue=None,
+                comm_log: list | None = None) -> np.ndarray:
+        """:func:`forward_tokens` under this decoder's backend."""
+        return forward_tokens(self.weights, self.cfg, comm, kv, seq_ids,
+                              tokens, positions, queue=queue,
+                              comm_log=comm_log,
+                              attn_backend=self.attn_backend)
+
+
 # ---------------------------------------------------------------------------
 # Token emission: gather the logits shards, or ship only local argmaxes
 # ---------------------------------------------------------------------------
 
 
+#: Static int8 wire grid for quantized logits-shard emission: steps of
+#: 1/16, range ±127/16 ≈ ±7.94 — generous for RMS-normed logit heads.  The
+#: scale is a *constant* (not per-shard max-abs) on purpose: per-shard
+#: scales differ with the shard width ``V/P`` and would make the emitted
+#: token depend on the world size; a fixed grid quantizes every logit
+#: identically at any ``P`` (and rounding is monotone, so ties introduced
+#: by the grid break by first index — deterministically — at every world).
+WIRE_I8_STEP = np.float32(16.0)
+
+
+def _wire_codec(wire: str):
+    """(encode, decode) for one emission wire dtype.  ``encode`` maps an
+    f32 array to what crosses the wire; ``decode`` maps wire elements back
+    to f32 (elementwise, so it commutes with the allgather reshapes)."""
+    ident = lambda x: x  # noqa: E731
+    if wire == "f32":
+        return ident, ident
+    if wire == "bf16":
+        import ml_dtypes
+
+        return (lambda x: x.astype(ml_dtypes.bfloat16),
+                lambda x: np.asarray(x).astype(np.float32))
+    if wire == "int8":
+        return (lambda x: np.clip(np.rint(x * WIRE_I8_STEP), -127,
+                                  127).astype(np.int8),
+                lambda x: np.asarray(x).astype(np.float32) / WIRE_I8_STEP)
+    if wire == "fp8":
+        import ml_dtypes
+
+        return (lambda x: x.astype(ml_dtypes.float8_e4m3fn),
+                lambda x: np.asarray(x).astype(np.float32))
+    raise ValueError(f"unknown wire dtype {wire!r}")
+
+
 def gather_logits(comm: Communicator, shard: np.ndarray,
-                  queue=None) -> Request:
+                  queue=None, wire: str = "f32") -> Request:
     """Issue the allgather of logits shards nonblockingly.  The finalized
-    result is the full ``[P, B, V]`` distribution in natural vocab order."""
+    result is the full ``[P, B, V]`` distribution in natural vocab order.
+
+    ``wire`` quantizes the shards *on the wire* (the allgather payload the
+    selector prices): ``bf16`` halves it, ``int8``/``fp8`` quarter it.
+    Quantization applies even at ``P = 1`` — the emitted token is the
+    argmax of the *dequantized* logits, and world-invariance requires every
+    world to argmax the same array (see :data:`WIRE_I8_STEP`)."""
     P, B, Vl = shard.shape
+    enc, dec = _wire_codec(wire)
+    wired = enc(shard)
 
     def rebuild(flat):
         if P == 1:
-            return shard
-        g = flat.reshape(P, P, B, Vl)  # [holder, contributor, B, Vl]
+            return dec(wired).reshape(P, B, Vl)
+        g = dec(flat).reshape(P, P, B, Vl)  # [holder, contributor, B, Vl]
         return np.moveaxis(g, 1, 2).reshape(P, B, P * Vl)
 
     from ..core import requests as R
 
-    req = R.iallgather(shard, comm, algorithm="auto", finalize=rebuild)
+    req = R.iallgather(wired, comm, algorithm="auto", finalize=rebuild)
     if queue is not None:
         queue.push(req)
     return req

@@ -97,7 +97,7 @@ def test_kv_append_gather_pads_to_reservation():
     kv.alloc(7, capacity=6)  # 2 pages -> gather pads to 8 slots
     k = np.random.default_rng(0).normal(size=(2, 2, 3, 2, 4)).astype(np.float32)
     kv.append(7, k, k)
-    gk, gv = kv.gather(7)
+    gk, gv = kv.gather(7, pad=True)
     assert gk.shape == (2, 2, 8, 2, 4)
     assert np.array_equal(gk[:, :, :3], k)
     assert not gk[:, :, 3:].any()  # beyond length: exact zeros
@@ -298,3 +298,157 @@ def test_engine_serve_plan_uses_engine_channel():
         plan = eng.serve_plan(prompt_len=8)
         assert plan.decode.allreduce.channel == eng.channel
         assert plan.P == 2 and plan.decode.usd_per_mtok > 0
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV tiers + the paged-attention kernel backend
+# ---------------------------------------------------------------------------
+
+
+def test_kv_gather_views_are_zero_copy():
+    kv = PagedKVCache(layers=2, n_pages=4, page_size=4, heads_local=2,
+                      head_dim=4, world=2)
+    kv.alloc(7, capacity=6)
+    k = np.random.default_rng(0).normal(size=(2, 2, 3, 2, 4)).astype(np.float32)
+    kv.append(7, k, k)
+    kpages, vpages = kv.gather(7)  # default: per-page views, no copy
+    assert isinstance(kpages, tuple) and len(kpages) == 2
+    assert kpages[0].shape == (2, 2, 4, 2, 4)  # [L, P, ps, Hl, hd]
+    assert all(np.shares_memory(p, kv.k_pool) for p in kpages)
+    assert all(np.shares_memory(p, kv.v_pool) for p in vpages)
+    k1, _ = kv.gather(7, layer=1)
+    assert k1[0].shape == (2, 4, 2, 4) and np.shares_memory(k1[0], kv.k_pool)
+    # and the padded legacy path still copies (mutating it is safe)
+    gk, _ = kv.gather(7, pad=True)
+    assert not np.shares_memory(gk, kv.k_pool)
+
+
+def test_kv_table_row_pads_with_page_zero():
+    kv = PagedKVCache(layers=1, n_pages=6, page_size=4, heads_local=1,
+                      head_dim=4, world=1)
+    kv.alloc(0, capacity=4)
+    pages = kv.alloc(1, capacity=8)
+    row = kv.table(1, width=4)
+    assert row.dtype == np.int32 and row.shape == (4,)
+    assert tuple(row[:2]) == pages and tuple(row[2:]) == (0, 0)
+    with pytest.raises(ValueError):
+        kv.table(1, width=1)
+
+
+def test_kv_int8_write_once_scale_policy():
+    """The page-opening token fixes the per-(page, head) scale; per-head
+    write_kv and batched append produce identical pool bits (the property
+    that makes a quantized decode replayable)."""
+    rng = np.random.default_rng(3)
+    k = rng.normal(size=(1, 1, 4, 2, 4)).astype(np.float32)
+    v = rng.normal(size=(1, 1, 4, 2, 4)).astype(np.float32)
+    mk = lambda: PagedKVCache(layers=1, n_pages=2, page_size=4,  # noqa: E731
+                              heads_local=2, head_dim=4, world=1,
+                              kv_dtype="int8")
+    batched = mk()
+    batched.alloc(0, capacity=4)
+    batched.append(0, k, v)
+    stepped = mk()
+    stepped.alloc(0, capacity=4)
+    for t in range(4):
+        page, off = stepped.slot(0, t)
+        for h in range(2):
+            stepped.write_kv(0, 0, h, page, off, k[0, 0, t, h], v[0, 0, t, h])
+        stepped.advance(0, 1)
+    assert batched.k_pool.dtype == np.int8
+    assert np.array_equal(batched.k_pool, stepped.k_pool)
+    assert np.array_equal(batched.v_pool, stepped.v_pool)
+    assert np.array_equal(batched.k_scale, stepped.k_scale)
+    # scale comes from token 0 only; later tokens clip to its grid
+    expect = np.abs(k[0, 0, 0]).max(-1) / np.float32(127.0)
+    np.testing.assert_allclose(batched.k_scale[0, 0, 0], expect, rtol=1e-6)
+    # padded gather dequantizes: within half a step of the clipped truth
+    gk, _ = batched.gather(0, pad=True)
+    step = batched.k_scale[0, 0, 0][None, :, None]
+    clipped = np.clip(k[0, 0], -127 * step, 127 * step)
+    assert np.abs(gk[0, 0, :4] - clipped).max() <= step.max() * 0.5 + 1e-7
+    # free() resets scales to the unit grid
+    batched.free(0)
+    assert np.all(batched.k_scale == 1.0) and np.all(batched.v_scale == 1.0)
+
+
+def test_kv_dtype_page_bytes_tiers():
+    mk = lambda dt: PagedKVCache(layers=1, n_pages=2, page_size=8,  # noqa: E731
+                                 heads_local=2, head_dim=16, world=1,
+                                 kv_dtype=dt)
+    f32, bf16, i8 = mk("f32"), mk("bf16"), mk("int8")
+    assert f32.page_nbytes == 2 * 8 * 2 * 16 * 4
+    assert bf16.page_nbytes == f32.page_nbytes // 2  # 2x
+    # int8 carries 2*Hl f32 scales per page on top of 1-byte elements
+    assert i8.page_nbytes == f32.page_nbytes // 4 + 2 * 2 * 4  # ~4x
+    assert i8.quantized and not f32.quantized
+    with pytest.raises(ValueError):
+        mk("f16")
+
+
+def test_kernel_backend_emits_gather_backend_tokens():
+    """The Pallas paged-attention backend and the gather-and-pad numpy
+    backend agree on every emitted token (equivalent f32 math)."""
+    base, _ = _serve(world=2)
+    kern, facts = _serve(world=2, attn_backend="kernel")
+    assert kern == base
+    assert facts["pending"] == 0 and facts["pages"] == 0
+
+
+def test_kernel_backend_bitexact_across_worlds():
+    """decode == prefill == replay at any pow2 world, kernel backend."""
+    ref, _ = _serve(world=1, attn_backend="kernel")
+    for P in (2, 4):
+        got, facts = _serve(world=P, attn_backend="kernel")
+        assert got == ref, f"world {P}"
+        assert facts["pending"] == 0
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "bf16"])
+def test_quantized_kv_bitexact_across_worlds(kv_dtype):
+    """Quantized tiers keep world-invariance: per-(page, head) scales and
+    the static emission wire are sharding-independent."""
+    ref, _ = _serve(world=1, attn_backend="kernel", kv_dtype=kv_dtype)
+    got, _ = _serve(world=4, attn_backend="kernel", kv_dtype=kv_dtype)
+    assert got == ref
+    # and the quantization really engaged: trajectories differ from f32
+    f32, _ = _serve(world=1, attn_backend="kernel")
+    assert kv_dtype == "bf16" or got != f32
+
+
+def test_kill_rank_mid_decode_replays_bitexact_under_int8():
+    """The ISSUE-8 elasticity gate: kill a rank mid-decode with int8 KV
+    pages + the kernel backend; the heal must land on the unfailed
+    trajectory (write-once scales make the re-prefill quantize every
+    token exactly as the incremental decode did)."""
+    ref, clean = _serve(world=4, attn_backend="kernel", kv_dtype="int8")
+    got, facts = _serve(world=4, attn_backend="kernel", kv_dtype="int8",
+                        kill=(3, 2))
+    assert clean["heals"] == 0 and facts["heals"] == 1
+    assert facts["world"] == 2  # pow2_floor of 3 survivors
+    assert got == ref
+    assert facts["pending"] == 0 and facts["pages"] == 0
+
+
+def test_engine_rejects_bad_kv_dtype_and_backend():
+    with pytest.raises(ValueError):
+        _engine(kv_dtype="f16")
+    with pytest.raises(ValueError):
+        _engine(attn_backend="flash")
+    with pytest.raises(ValueError):
+        _engine(wire_dtype="f64")
+
+
+def test_serve_plan_kv_dtype_shrinks_emission_payload():
+    kw = dict(d_model=1024, n_layers=8, vocab_size=32000, P=8, batch=4,
+              prompt_len=128, channels=("ici",))
+    f32 = serve_plan(**kw)
+    i8 = serve_plan(kv_dtype="int8", **kw)
+    bf16 = serve_plan(kv_dtype="bf16", **kw)
+    assert i8.decode.nbytes_allgather == f32.decode.nbytes_allgather / 4
+    assert bf16.decode.nbytes_allgather == f32.decode.nbytes_allgather / 2
+    assert i8.decode.comm_s < f32.decode.comm_s
+    assert i8.kv_bytes_per_token == f32.kv_bytes_per_token / 4
+    assert f32.kv_bytes_per_token == 2 * 8 * 1024 * 4 / 8
+    table = explain_serve_plan(kv_dtype="int8", **kw)
+    assert "kv: dtype int8" in table

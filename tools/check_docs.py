@@ -42,6 +42,7 @@ DOCTEST_MODULES = (
     "repro.core.compression",
     "repro.core.flowsim",
     "repro.core.selector",
+    "repro.kernels.paged_attention",
     "repro.runtime.membership",
     "repro.runtime.straggler",
     "repro.runtime.elastic",
