@@ -173,6 +173,89 @@ def _flow_rows():
     return rows
 
 
+def _rdma_rows():
+    """The lease-based one-sided channel next to its two-sided rivals:
+    measured LeaseTransport collectives with the warm-pool/lease counters,
+    plus the modeled rdma-vs-host/sim envelope around the crossover."""
+    from repro.core.rdma import LeaseTransport
+    from repro.core.selector import crossover_nbytes
+
+    rows = []
+    for P in (4, 8, 16):
+        x = np.random.default_rng(4).normal(size=(P, 64)).astype(np.float32)
+        t = LeaseTransport(P)
+        t0 = time.perf_counter()
+        A.allreduce_recursive_doubling(t, x.copy(), "add")
+        us = (time.perf_counter() - t0) * 1e6
+        s = t.stats
+        spec = CHANNELS["rdma"]
+        rows.append((
+            f"collectives/allreduce@rdma/P{P}", us,
+            f"rounds={t.trace.rounds} puts={s.puts} cold={s.cold_connects} "
+            f"warm={s.warm_hits} renewals={s.renewals} "
+            f"trace_time={t.trace.time(spec.alpha, spec.beta)*1e3:.3f}ms",
+        ))
+    for op in ("allreduce", "allgather"):
+        for P in (4, 8, 16):
+            xb = crossover_nbytes(op, P, "rdma", "host")
+            below = select(op, 64, P, channels=("rdma", "host"))
+            above = select(op, 4 << 20, P, channels=("rdma", "host"))
+            rows.append((
+                f"rdma_crossover/{op}/P{P}", xb,
+                f"crossover_bytes={xb:.0f} pick@64B={below.channel} "
+                f"pick@4MB={above.channel}",
+            ))
+    return rows
+
+
+def crossover_report():
+    """The rdma artifact (``--backend rdma``): the modeled handover point
+    from the one-sided lease channel to each two-sided channel per op and
+    world size, plus the regime acceptance the selector tests assert —
+    rdma wins the 8-bytes-per-rank decode argmax exchange, the host broker
+    wins bandwidth-bound payloads past the crossover."""
+    from repro.core.selector import crossover_nbytes, serve_plan
+
+    spec = CHANNELS["rdma"]
+    points = []
+    for slow in ("host", "sim"):
+        for op in ("allreduce", "allgather"):
+            for P in (4, 8, 16):
+                xb = crossover_nbytes(op, P, "rdma", slow)
+                points.append({
+                    "op": op, "P": P, "fast": "rdma", "slow": slow,
+                    "crossover_nbytes": xb,
+                    "pick_below": select(op, 64, P,
+                                         channels=("rdma", slow)).channel,
+                    "pick_above": select(op, xb * 4, P,
+                                         channels=("rdma", slow)).channel,
+                })
+    plan = serve_plan(d_model=4096, n_layers=32, vocab_size=128256, P=8,
+                      batch=4, prompt_len=2048, channels=("rdma", "host"),
+                      logits_mode="local-argmax")
+    decode_ch = plan.decode.allgather.channel
+    prefill_ch = plan.prefill.allreduce.channel
+    return {
+        "spec": {"alpha_s": spec.alpha, "beta_s_per_byte": spec.beta,
+                 "hops": spec.hops, "one_sided": spec.one_sided},
+        "crossovers": points,
+        "serve_regimes": {
+            "decode_argmax_allgather": decode_ch,
+            "prefill_allreduce": prefill_ch,
+            "decode_nbytes": plan.decode.nbytes_allgather,
+            "prefill_nbytes": plan.prefill.nbytes_allreduce,
+        },
+        "acceptance": {
+            "rdma_wins_small": all(p["pick_below"] == "rdma"
+                                   for p in points),
+            "two_sided_wins_large": all(p["pick_above"] == p["slow"]
+                                        for p in points),
+            "decode_on_rdma": decode_ch == "rdma",
+            "prefill_on_host": prefill_ch == "host",
+        },
+    }
+
+
 def divergence_report():
     """The artifact ``--backend both`` uploads: scenarios where the emergent
     flow times break the α-β account by far more than 20%, plus the
@@ -257,17 +340,20 @@ def main(argv=None) -> int:
 
     ``--backend model`` prints the classic modeled/measured rows,
     ``--backend flow`` the modeled-vs-flow divergence rows, ``--backend
-    both`` prints both and writes the divergence artifact JSON to
-    ``--out``."""
+    rdma`` the lease-channel rows (and writes the crossover artifact JSON
+    to ``--rdma-out``), ``--backend both`` prints everything and writes
+    the divergence artifact JSON to ``--out``."""
     import argparse
     import json
     import os
 
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--backend", choices=("model", "flow", "both"),
+    ap.add_argument("--backend", choices=("model", "flow", "rdma", "both"),
                     default="model")
     ap.add_argument("--out", default="benchmarks/artifacts/flowsim/"
                                      "divergence.json")
+    ap.add_argument("--rdma-out", default="benchmarks/artifacts/rdma/"
+                                          "crossover.json")
     args = ap.parse_args(argv)
 
     rows = []
@@ -275,9 +361,25 @@ def main(argv=None) -> int:
         rows += run()
     if args.backend in ("flow", "both"):
         rows += _flow_rows()
+    if args.backend in ("rdma", "both"):
+        rows += _rdma_rows()
     print("name,us_per_call,derived")
     for n, us, derived in rows:
         print(f"{n},{us:.2f},{derived}")
+
+    if args.backend in ("rdma", "both"):
+        report = crossover_report()
+        os.makedirs(os.path.dirname(args.rdma_out), exist_ok=True)
+        with open(args.rdma_out, "w") as fh:
+            json.dump(report, fh, indent=1)
+            fh.write("\n")
+        acc = report["acceptance"]
+        print(f"# crossover artifact -> {args.rdma_out}: "
+              f"rdma wins small={acc['rdma_wins_small']}, "
+              f"two-sided wins large={acc['two_sided_wins_large']}, "
+              f"decode on rdma={acc['decode_on_rdma']}")
+        if not all(acc.values()):
+            return 1
 
     if args.backend == "both":
         report = divergence_report()

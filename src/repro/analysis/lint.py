@@ -176,6 +176,7 @@ _SAFE_ROOTS = frozenset({
 
 _TRANSPORT_CLASSES = frozenset({
     "SimTransport", "HostTransport", "JaxTransport", "HostBroker",
+    "LeaseTransport",
 })
 
 

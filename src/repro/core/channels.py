@@ -40,6 +40,12 @@ sim          direct    :class:`~repro.core.transport.SimTransport`
 host         mediated  :class:`~repro.core.transport.HostTransport`
                        (PUT/GET through a shared host-memory broker — the
                        TPU analogue of the paper's S3/Redis channels)
+rdma         direct    :class:`~repro.core.rdma.LeaseTransport`
+                       (lease-based one-sided puts into pre-registered
+                       remote buffers over a warm connection pool —
+                       ``hops=1``, near-α-only; lease lapses surface as
+                       :class:`~repro.core.transport.RankFailure` evidence
+                       for the elastic runtime)
 flow         direct    :class:`~repro.core.flowsim.FlowTransport`
                        (flow-level network simulation: emergent contention
                        over an explicit topology; private — a validation
@@ -238,6 +244,15 @@ def _host_factory(size=None, broker: HostBroker | None = None, **_):
     return HostTransport(size, broker=broker)
 
 
+def _rdma_factory(size=None, lease_term=None, **_):
+    if not size:
+        raise ValueError("rdma channel needs size=")
+    from .rdma import DEFAULT_LEASE_TERM, LeaseTransport
+
+    return LeaseTransport(
+        size, lease_term=DEFAULT_LEASE_TERM if lease_term is None else lease_term)
+
+
 for _name, _factory in (
     ("ici", _jax_factory),
     ("dcn", _jax_factory),
@@ -246,6 +261,9 @@ for _name, _factory in (
     ("xla", _jax_factory),
     ("sim", _sim_factory),
     ("host", _host_factory),
+    # lease-based one-sided RDMA (repro.core.rdma): hops=1, near-α-only —
+    # the selector's latency-bound pick until the bandwidth crossover
+    ("rdma", _rdma_factory),
     ("s3", None),
     ("dynamodb", None),
     ("redis", None),

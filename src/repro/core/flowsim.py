@@ -194,15 +194,39 @@ class Topology:
         return cls(f"hier(P={P},inner={inner})", links, latency_s, route)
 
     @classmethod
+    def onesided(cls, P: int, bw: float = 2e9,
+                 latency_s: float = 2e-6) -> "Topology":
+        """One-sided RDMA shape (the ``rdma`` lease channel): a put lands
+        straight in the destination's registered buffer, so there are no
+        separate CPU-side up/down staging links — each rank exposes a
+        single full-duplex-agnostic ``nic`` link that its outgoing puts
+        *and* the puts landing in its memory both cross.  Under an
+        all-ranks round each NIC carries one flow per direction, so incast
+        onto one rank halves emergent rates in a way the per-message α-β
+        model cannot see (the one-sided analogue of the broker star's
+        divergence)."""
+        links = {f"nic:{r}": float(bw) for r in range(int(P))}
+
+        def route(s: int, d: int) -> tuple[str, ...]:
+            if s == d:  # loopback put never leaves the NIC twice
+                return (f"nic:{s}",)
+            return (f"nic:{s}", f"nic:{d}")
+
+        return cls(f"onesided(P={P})", links, latency_s, route)
+
+    @classmethod
     def from_spec(cls, spec: ChannelSpec, P: int) -> "Topology":
         """Build the topology a :class:`~repro.core.models.ChannelSpec`
         implies: link bandwidth ``1/β``, latency ``α``; mediated channels
-        (``hops=2`` broker staging) get the star shape, direct channels the
-        flat switch.  This is the bridge :func:`repro.core.selector.calibrate`
+        (``hops=2`` broker staging) get the star shape, one-sided channels
+        (``rdma``) the shared-NIC shape, other direct channels the flat
+        switch.  This is the bridge :func:`repro.core.selector.calibrate`
         uses to replay the candidate sweep on the flow backend."""
         bw = 1.0 / spec.beta
         if spec.kind == "mediated":
             return cls.star(P, bw=bw, broker_bw=bw, latency_s=spec.alpha)
+        if getattr(spec, "one_sided", False):
+            return cls.onesided(P, bw=bw, latency_s=spec.alpha)
         return cls.flat(P, bw=bw, latency_s=spec.alpha)
 
 

@@ -50,6 +50,8 @@ class ChannelSpec:
     serverless: bool = True  # no user-side provisioning needed
     max_message: float = float("inf")  # bytes
     hops: int = 1  # serialized store-and-forward hops per message (mediated: 2)
+    one_sided: bool = False  # RDMA-style: put lands in a pre-registered
+    # remote buffer with no receiver CPU on the data path (lease-gated)
     notes: str = ""
 
     def p2p_time(self, nbytes: float) -> float:
@@ -128,6 +130,20 @@ TPU_CHANNELS: dict[str, ChannelSpec] = {
         "flow", alpha=5e-6, beta=1 / (16 * GB), kind="direct", push=True,
         notes="flow-level network simulation backend (emergent contention; "
         "see repro.core.flowsim)",
+    ),
+    # Lease-based one-sided RDMA (the rFaaS design, repro.core.rdma): a put
+    # lands directly in a pre-registered remote buffer over a warm queue
+    # pair, so the per-message software overhead collapses to near-α (no
+    # rendezvous, no receiver CPU) — but registered-buffer bandwidth is
+    # modest, so the two-sided channels win back past the crossover
+    # (p2p: ≈ 7 KB vs sim, ≈ 152 KB vs the hops=2 host broker; best-of-
+    # channel allreduce envelope at P=8 flips vs host near 0.5 MB — see
+    # selector.crossover_nbytes and docs/rdma.md).
+    "rdma": ChannelSpec(
+        "rdma", alpha=2e-6, beta=1 / (2 * GB), kind="direct", push=True,
+        hops=1, one_sided=True,
+        notes="lease-based one-sided RDMA into pre-registered remote "
+        "buffers (rFaaS-style; see repro.core.rdma)",
     ),
 }
 

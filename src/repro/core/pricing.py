@@ -124,7 +124,7 @@ def p2p_exchange_cost(
         c_usd = P_REDIS * t * n_exchanges
     elif channel_name == "direct":
         c_usd = P_HPS * t * n_exchanges
-    elif channel_name in ("ici", "dcn", "xla", "host", "sim"):
+    elif channel_name in ("ici", "dcn", "xla", "host", "sim", "rdma"):
         c_usd = 0.0  # wire/host path is part of the chip price
         f_usd = P * t * P_CHIP_S * n_exchanges
     else:

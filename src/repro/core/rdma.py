@@ -1,0 +1,302 @@
+"""Lease-based one-sided "RDMA" channel (the rFaaS design, simulated).
+
+Every other software channel in the registry is two-sided: ``sim``/``flow``
+trace a rendezvous per exchange and the ``host`` broker stages each message
+through a PUT/GET pair (``hops=2``).  rFaaS (PAPERS.md) shows the missing
+channel class for serverless functions: **one-sided RDMA writes into
+pre-registered remote buffers**, where the receiver's CPU is not involved
+in the data path and the per-message software overhead collapses to nearly
+the wire α.  The price of admission is a *lease*: a remote function grants
+access to its registered memory for a bounded term and the sender must
+renew before the term lapses — and a lapsed lease is *failure evidence*,
+which is exactly what the elastic runtime's detect → quiesce → regroup
+protocol consumes (:mod:`repro.runtime.elastic`).
+
+This module provides that channel for the software stack:
+
+* :class:`Lease` — the acquire / renew / expire state machine.  All clocks
+  are **simulated time**: a :class:`LeaseClock` that ticks once per issued
+  exchange, so every expiry lands on a deterministic round and tests are
+  reproducible without wall-clock sleeps.
+* :class:`ConnectionPool` — warm (src, dst) queue pairs: the first put
+  between a pair is a cold connect, every later one is a warm hit
+  (observable in :class:`RdmaStats`, the analogue of the host broker's
+  ``BrokerStats``).
+* :class:`LeaseTransport` — a :class:`~repro.core.transport.SimTransport`
+  whose exchanges are one-sided puts: data lands directly in the
+  destination rank's registered region in a **single hop** (one trace slot
+  per exchange, priced by the ``hops=1`` ``rdma``
+  :class:`~repro.core.models.ChannelSpec`).  Live traffic doubles as the
+  heartbeat — every issued exchange renews the leases of all ranks that
+  are still talking; :meth:`LeaseTransport.suspend_renew` makes a rank go
+  silent so its lease lapses ``term`` ticks later and the next exchange
+  touching it raises :class:`~repro.core.transport.RankFailure` with
+  ``reason="lease-expired"``.
+
+The ``rdma`` channel spec (α = 2 µs, 2 GB/s, ``hops=1``) is registered in
+:mod:`repro.core.channels`, so the selector prices it like any other
+channel: it wins the small latency-bound regime (e.g. the 8-bytes-per-rank
+decode argmax exchange) and loses to the higher-bandwidth two-sided
+channels past the modeled crossover — see
+:func:`repro.core.selector.crossover_nbytes` and ``docs/rdma.md``.
+
+Doctest — the lease state machine::
+
+    >>> lease = Lease(rank=0, term=4)
+    >>> lease.acquire(now=0)
+    >>> lease.state, lease.expires_at
+    ('held', 4)
+    >>> lease.renew(now=3)
+    >>> lease.expires_at
+    7
+    >>> lease.valid(now=9)          # lapsed (9 >= 7): flips to 'expired'
+    False
+    >>> try:
+    ...     lease.renew(now=10)     # an expired lease cannot be renewed
+    ... except LeaseError:
+    ...     print("renew refused")
+    renew refused
+    >>> lease.acquire(now=10)       # ... it must be re-acquired
+    >>> lease.state
+    'held'
+
+Doctest — one-sided exchanges, warm pool, and a lapse mid-collective::
+
+    >>> import numpy as np
+    >>> t = LeaseTransport(4, lease_term=8)
+    >>> x = t.stack([np.full((2,), r, np.float32) for r in range(4)])
+    >>> ring = [(r, (r + 1) % 4) for r in range(4)]
+    >>> t.ppermute(x, ring)[1].tolist()
+    [0.0, 0.0]
+    >>> (t.stats.puts, t.stats.cold_connects, t.clock.now)
+    (4, 4, 1)
+    >>> _ = t.ppermute(x, ring)
+    >>> t.stats.warm_hits           # second round reuses pooled queue pairs
+    4
+    >>> t.suspend_renew(2)          # rank 2 goes silent at t=2 ...
+    >>> for _ in range(7):
+    ...     _ = t.ppermute(x, ring)
+    >>> from repro.core.transport import RankFailure
+    >>> try:                        # ... and its lease lapses at t=2+8
+    ...     t.ppermute(x, ring)
+    ... except RankFailure as e:
+    ...     print(e.rank, e.reason)
+    2 lease-expired
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .transport import Perm, RankFailure, SimTransport, TransportRequest
+
+#: Default lease term in simulated ticks (one tick per issued exchange).
+#: Long enough that no collective in the test suite spans a term without
+#: renewal; short enough that a silent rank is detected within one step.
+DEFAULT_LEASE_TERM = 64
+
+
+class LeaseError(RuntimeError):
+    """An invalid lease transition (e.g. renewing an expired lease)."""
+
+
+class LeaseClock:
+    """Deterministic simulated clock: one tick per issued exchange.
+
+    Driving lease time from the exchange count (not wall clock) makes
+    every acquire/renew/expire land on a reproducible round, which is what
+    lets the conformance and elastic suites assert exact heal points."""
+
+    def __init__(self) -> None:
+        self.now = 0
+
+    def tick(self) -> int:
+        self.now += 1
+        return self.now
+
+
+@dataclass
+class Lease:
+    """One rank's access lease on its peers' registered memory.
+
+    States: ``released`` → (:meth:`acquire`) → ``held`` → (:meth:`renew`
+    before ``expires_at``) → ``held`` ... → (clock passes ``expires_at``)
+    → ``expired`` → (:meth:`acquire`) → ``held``.  Expiry is observed
+    lazily by :meth:`valid`; a lease in state ``expired`` must be
+    re-acquired, never renewed."""
+
+    rank: int
+    term: int
+    state: str = "released"
+    renewed_at: int = -1
+    renewals: int = 0
+
+    @property
+    def expires_at(self) -> int:
+        """First tick at which the lease is no longer valid."""
+        return self.renewed_at + self.term
+
+    def acquire(self, now: int) -> None:
+        """``released``/``expired`` → ``held`` (a fresh grant)."""
+        if self.state == "held":
+            raise LeaseError(f"rank {self.rank}: lease already held")
+        self.state = "held"
+        self.renewed_at = int(now)
+
+    def renew(self, now: int) -> None:
+        """Extend a held, still-valid lease to ``now + term``."""
+        if self.state != "held":
+            raise LeaseError(
+                f"rank {self.rank}: cannot renew a lease in state "
+                f"'{self.state}' — re-acquire instead")
+        if now >= self.expires_at:
+            self.state = "expired"
+            raise LeaseError(
+                f"rank {self.rank}: lease lapsed at t={self.expires_at}, "
+                f"renew at t={now} refused")
+        self.renewed_at = int(now)
+        self.renewals += 1
+
+    def valid(self, now: int) -> bool:
+        """True iff held and unexpired at ``now`` (flips a lapsed lease
+        to ``expired`` as a side effect — lazy expiry)."""
+        if self.state == "held" and now >= self.expires_at:
+            self.state = "expired"
+        return self.state == "held"
+
+    def release(self) -> None:
+        """Any state → ``released`` (a voluntary hand-back, not a fault)."""
+        self.state = "released"
+
+
+class ConnectionPool:
+    """Warm (src, dst) queue-pair pool.
+
+    The first put between a pair pays the cold connect (in the real system:
+    queue-pair exchange through the rendezvous); every later put on the
+    same pair is a warm hit.  The pool never evicts — serverless RDMA keeps
+    connections warm for the function's lifetime (rFaaS §4)."""
+
+    def __init__(self) -> None:
+        self._established: set[tuple[int, int]] = set()
+
+    def connect(self, src: int, dst: int) -> bool:
+        """Ensure a queue pair exists; returns True on a warm hit."""
+        key = (int(src), int(dst))
+        if key in self._established:
+            return True
+        self._established.add(key)
+        return False
+
+    def __len__(self) -> int:
+        return len(self._established)
+
+
+@dataclass
+class RdmaStats:
+    """Observable counters (the one-sided analogue of ``BrokerStats``)."""
+
+    puts: int = 0             # one-sided writes issued
+    put_bytes: int = 0        # payload bytes written
+    cold_connects: int = 0    # queue pairs established
+    warm_hits: int = 0        # puts that reused a pooled queue pair
+    registrations: int = 0    # remote-region (re)registrations
+    registered_bytes: int = 0  # current total registered across ranks
+    acquires: int = 0         # lease grants (initial + re-acquire)
+    renewals: int = 0         # heartbeat renewals
+    expiries: int = 0         # leases observed lapsed
+
+
+class LeaseTransport(SimTransport):
+    """One-sided software channel: puts land in registered remote buffers.
+
+    Subclasses :class:`~repro.core.transport.SimTransport`, so it inherits
+    lockstep stacked-array semantics, the pending-slot trace, and kill/
+    revive fault injection — and adds the lease machinery: a deterministic
+    :class:`LeaseClock` ticks once per exchange, live traffic renews every
+    unsuspended lease (traffic *is* the heartbeat), and any exchange that
+    touches a rank whose lease has lapsed raises
+    :class:`~repro.core.transport.RankFailure` with
+    ``reason="lease-expired"`` so the elastic controller heals exactly as
+    it does for a killed rank.
+
+    Each exchange records **one** trace slot (``hops=1``): the put is the
+    whole data path, there is no broker GET hop."""
+
+    def __init__(self, size: int, lease_term: int = DEFAULT_LEASE_TERM):
+        if lease_term < 2:
+            raise ValueError("lease_term must be >= 2 (a 1-tick lease "
+                             "lapses before the next heartbeat can renew it)")
+        super().__init__(size)
+        self.clock = LeaseClock()
+        self.stats = RdmaStats()
+        self.pool = ConnectionPool()
+        self.lease_term = int(lease_term)
+        self.leases = {r: Lease(r, self.lease_term) for r in range(self.size)}
+        for lease in self.leases.values():
+            lease.acquire(self.clock.now)
+            self.stats.acquires += 1
+        self._silent: set[int] = set()
+        self._regions: dict[int, int] = {}  # rank -> registered bytes
+
+    # lease fault injection --------------------------------------------------
+    def suspend_renew(self, rank: int) -> None:
+        """Make ``rank`` go silent: its lease stops renewing and lapses
+        ``lease_term`` ticks after its last renewal — the lease-based
+        analogue of :meth:`~repro.core.transport.SimTransport.kill`, with
+        detection latency instead of an immediate mark."""
+        if not 0 <= rank < self.size:
+            raise ValueError(f"rank {rank} outside [0, {self.size})")
+        self._silent.add(rank)
+
+    def revive(self, rank: int) -> None:
+        """Clear failure marks AND re-acquire the rank's lease."""
+        super().revive(rank)
+        self._silent.discard(rank)
+        lease = self.leases[rank]
+        if lease.state != "held":
+            lease.acquire(self.clock.now)
+            self.stats.acquires += 1
+
+    # one-sided exchange -----------------------------------------------------
+    def ppermute_start(self, x, perm: Perm) -> TransportRequest:
+        pairs = list(perm)
+        now = self.clock.tick()
+        # Heartbeat: issuing traffic renews every unsuspended, still-valid
+        # lease.  A lapsed lease is left for the validity check below.
+        for lease in self.leases.values():
+            if lease.rank in self._silent or lease.state != "held":
+                continue
+            if now < lease.expires_at:
+                lease.renew(now)
+                self.stats.renewals += 1
+        for src, dst in pairs:
+            for r in (int(src), int(dst)):
+                lease = self.leases[r]
+                if not lease.valid(now):
+                    self.stats.expiries += 1
+                    raise RankFailure(
+                        r,
+                        f"rank {r} lease lapsed at t={lease.expires_at} "
+                        f"(now t={now}, last renewed t={lease.renewed_at})",
+                        reason="lease-expired")
+        # Connection pool + remote-region registration accounting.  The
+        # region is grow-only: re-registration only happens when a larger
+        # payload arrives (warm path registers nothing).
+        per_msg = int(np.prod(x.shape[1:])) * x.dtype.itemsize
+        for src, dst in pairs:
+            if self.pool.connect(int(src), int(dst)):
+                self.stats.warm_hits += 1
+            else:
+                self.stats.cold_connects += 1
+            if self._regions.get(int(dst), 0) < per_msg:
+                self.stats.registrations += 1
+                self._regions[int(dst)] = per_msg
+            self.stats.puts += 1
+            self.stats.put_bytes += per_msg
+        self.stats.registered_bytes = sum(self._regions.values())
+        # The put IS the data path: SimTransport's single trace slot per
+        # exchange is exactly the hops=1 account the rdma spec prices.
+        return super().ppermute_start(x, pairs)

@@ -182,6 +182,54 @@ def select(
     return min(cands, key=lambda c: c.objective(objective, price_weight))
 
 
+def crossover_nbytes(
+    op: str,
+    P: int,
+    fast: str,
+    slow: str,
+    lo: float = 8.0,
+    hi: float = float(1 << 30),
+    objective: str = "time",
+    rel_tol: float = 0.01,
+) -> float:
+    """Payload size where the selector's pick flips from the low-latency
+    channel ``fast`` to the high-bandwidth channel ``slow``.
+
+    The α-β model makes every per-candidate time affine in ``nbytes``, so
+    the best-of-each-channel envelope crosses once: below the returned size
+    ``fast`` wins (its smaller α dominates), above it ``slow`` wins (its
+    smaller effective β does).  Bisects the flat-candidate envelope
+    (hierarchical composites would blur the two-channel comparison) to
+    ``rel_tol`` relative precision.  This is how the ``rdma`` lease channel
+    is priced against the two-sided channels — e.g. rdma wins the 8-byte
+    decode argmax exchange and hands over to the host broker at ~100 KB:
+
+    >>> xb = crossover_nbytes("allreduce", 8, "rdma", "host")
+    >>> pick = lambda n: select("allreduce", n, 8,
+    ...                         channels=("rdma", "host")).channel
+    >>> pick(64), pick(xb * 4)
+    ('rdma', 'host')
+    """
+
+    def pick(n: float) -> str:
+        cands = candidates(op, n, P, (fast, slow), hierarchical=False)
+        if not cands:
+            raise ValueError(f"no feasible algorithm for {op} with P={P}")
+        return min(cands, key=lambda c: c.objective(objective)).channel
+
+    if pick(lo) != fast:
+        raise ValueError(f"{fast!r} does not win at nbytes={lo}")
+    if pick(hi) != slow:
+        raise ValueError(f"{slow!r} does not win at nbytes={hi}")
+    while hi / lo > 1.0 + rel_tol:
+        mid = math.sqrt(lo * hi)
+        if pick(mid) == fast:
+            lo = mid
+        else:
+            hi = mid
+    return math.sqrt(lo * hi)
+
+
 # ---------------------------------------------------------------------------
 # Bucket planning — how big should a fused communication bucket be?
 # ---------------------------------------------------------------------------
@@ -413,6 +461,21 @@ def serve_plan(
     (1, True)
     >>> plan.decode.usd_per_mtok > plan.prefill.usd_per_mtok  # amortization
     True
+
+    The software channels show the same regime split: against the
+    lease-based one-sided ``rdma`` channel and the ``hops=2`` host broker,
+    the 8-bytes-per-rank ``local-argmax`` emission exchange is pure latency
+    — rdma wins — while the bandwidth-bound prefill allreduce falls back to
+    the broker past the modeled crossover (:func:`crossover_nbytes`):
+
+    >>> soft = serve_plan(d_model=4096, n_layers=32, vocab_size=128256,
+    ...                   P=8, batch=4, prompt_len=2048,
+    ...                   channels=("rdma", "host"),
+    ...                   logits_mode="local-argmax")
+    >>> soft.decode.allgather.channel      # 8 B/rank max+argmax pair
+    'rdma'
+    >>> soft.prefill.allreduce.channel     # 134 MB: bandwidth-bound
+    'host'
 
     ``compute_s`` comes from ``flops_per_token`` (default: the dense
     ``12·L·D² + 2·D·V`` estimate) over ``P`` chips at ``peak_flops``

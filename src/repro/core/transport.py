@@ -67,13 +67,18 @@ class RankFailure(RuntimeError):
     """A transport operation touched a rank that has failed.
 
     Raised by the software channels when fault injection
-    (:meth:`SimTransport.kill`) has marked a participant dead.  Carries the
-    failed ``rank`` so the elastic runtime can mark it in
-    :class:`~repro.runtime.membership.Membership` and regroup."""
+    (:meth:`SimTransport.kill`) has marked a participant dead, or when a
+    lease-based channel (:class:`~repro.core.rdma.LeaseTransport`) observes
+    a lapsed lease.  Carries the failed ``rank`` so the elastic runtime can
+    mark it in :class:`~repro.runtime.membership.Membership` and regroup,
+    and a ``reason`` tag (``"rank-failure"``, ``"lease-expired"``, ...) the
+    elastic controller records as the evidence that drove the heal."""
 
-    def __init__(self, rank: int, message: str | None = None):
+    def __init__(self, rank: int, message: str | None = None,
+                 reason: str = "rank-failure"):
         super().__init__(message or f"rank {rank} failed mid-collective")
         self.rank = rank
+        self.reason = reason
 
 
 def is_pow2(n: int) -> bool:

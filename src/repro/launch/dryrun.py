@@ -435,6 +435,9 @@ def main():
     ap.add_argument("--hlo-out", type=str, default=None)
     ap.add_argument("--explain", action="store_true",
                     help="print the FMI selector table for this cell's grad sync")
+    ap.add_argument("--channel", type=str, default=None,
+                    help="add one channel (e.g. rdma) to the --explain "
+                         "candidate set, ahead of the built-in table")
     args = ap.parse_args()
 
     if args.explain and args.arch:
@@ -443,8 +446,10 @@ def main():
         cfg = configs.get(args.arch)
         nbytes = lm.count_params(cfg) * 2 / 256  # bf16 grads per chip share
         # full registry table: direct ici, provider xla, mediated host, sim
-        # oracle — plus their two-level hierarchical composites
-        chans = ("ici", "xla", "host", "sim")
+        # oracle, one-sided rdma — plus two-level hierarchical composites
+        chans = ("ici", "xla", "host", "sim", "rdma")
+        if args.channel and args.channel not in chans:
+            chans = (args.channel,) + chans
         print(f"grad-sync allreduce, {nbytes/1e6:.1f} MB/chip, 16 ranks:\n")
         # flow=True adds the modeled-vs-flow divergence column: every flat
         # candidate re-run on the flow-level backend (emergent link
@@ -469,6 +474,21 @@ def main():
                        calibration=cal)
         print(f"calibrated pick: {cbest.channel}/{cbest.algorithm} "
               f"depth={cbest.depth} ({cbest.time_s*1e6:.1f}us corrected)")
+        # one-sided rdma regime: the grad sync above is bandwidth-bound, so
+        # the lease channel loses it — the latency-bound end of the software
+        # stack (the serving decode argmax exchange, 8 B/rank) is where the
+        # near-α-only hops=1 path wins.  Show the pick and the modeled
+        # handover point to the two-sided broker (docs/rdma.md).
+        from ..core.selector import crossover_nbytes
+
+        argmax_bytes = 16 * 2 * 4  # 16 ranks x (max, argmax) f32 pair
+        small = select("allgather", argmax_bytes, 16,
+                       channels=("rdma", "host", "sim"))
+        xb = crossover_nbytes("allreduce", 16, "rdma", "host")
+        print(f"\nrdma (lease-based one-sided) regime: decode-argmax "
+              f"allgather {argmax_bytes} B -> {small.channel}/"
+              f"{small.algorithm} ({small.time_s*1e6:.2f}us); handover to "
+              f"host broker at ~{xb/1e3:.0f} KB (allreduce envelope, 16 ranks)")
         # bucketed-overlap plan: how the CommScheduler would coalesce the
         # per-layer gradient requests, with the backward compute window the
         # roofline model predicts for this arch as the overlap budget

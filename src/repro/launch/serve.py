@@ -52,11 +52,11 @@ def _explain(cfg, args) -> None:
     from ..core.selector import explain_serve_plan
 
     print(f"production serve plan for {cfg.name} "
-          f"(full config, ici channel):\n")
+          f"(full config, {args.channel} channel):\n")
     print(explain_serve_plan(
         cfg.d_model, cfg.n_layers, cfg.vocab_size, P=args.tp * 4,
         batch=args.batch * 4, prompt_len=args.prompt_len * 64,
-        channels=("ici",), logits_mode=args.logits_mode,
+        channels=(args.channel,), logits_mode=args.logits_mode,
     ))
     scfg = _tp_config(cfg, args.prompt_len, args.max_new)
     print(f"\nreduced engine plan (what this launcher runs, "
@@ -160,6 +160,10 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--channel", default="ici",
+                    help="channel the production --explain plan prices "
+                         "(e.g. 'rdma' shows the lease-based one-sided "
+                         "path winning the decode argmax regime)")
     ap.add_argument("--logits-mode", choices=["gather", "local-argmax"],
                     default="gather")
     ap.add_argument("--kv-dtype", choices=["f32", "bf16", "int8", "fp8"],

@@ -182,7 +182,15 @@ class ElasticController:
         a failure was detected (heartbeat timeout before the step, or a
         :class:`~repro.core.transport.RankFailure` escaping mid-step —
         transport evidence is committed to the membership first, so the
-        regroup sees the failed rank as dead regardless of timers)."""
+        regroup sees the failed rank as dead regardless of timers).
+
+        Transport evidence is not only kill marks: a lease-based channel
+        (:class:`~repro.core.rdma.LeaseTransport`) raises ``RankFailure``
+        with ``reason="lease-expired"`` when a rank's lease lapses
+        mid-collective, so a silent rank drives the same detect → quiesce
+        → regroup path as a crashed one.  The evidence kind is recorded on
+        the heal's history entry (``history[-1]["evidence"]``) for
+        post-mortems."""
         try:
             self.membership.check_alive()
             do_step()
@@ -190,7 +198,9 @@ class ElasticController:
         except RankFailure as e:
             self.membership.mark_failed(e.rank)
             self.heal()
+            self.history[-1]["evidence"] = getattr(e, "reason", "rank-failure")
             return True
         except GroupError:
             self.heal()
+            self.history[-1]["evidence"] = "heartbeat"
             return True

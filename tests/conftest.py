@@ -1,4 +1,4 @@
-"""Test-environment compatibility shims.
+"""Test-environment compatibility shims and shared registry fixtures.
 
 The property tests use ``hypothesis`` when it is installed.  The minimal CI
 container does not ship it, so this conftest installs a tiny deterministic
@@ -15,6 +15,23 @@ import importlib.util
 import random
 import sys
 import types
+
+import pytest
+
+# ---------------------------------------------------------------------------
+# Canonical channel-registry expectations (single source of truth)
+# ---------------------------------------------------------------------------
+# ``channels.default_channels()`` — every registered transport-capable,
+# non-provider, non-private channel, sorted.  Suites assert registry
+# membership against this one tuple (via the fixture below) instead of
+# inlining their own literals, so registering a new built-in channel is a
+# one-line change here rather than a hunt across unrelated test files.
+DEFAULT_CHANNELS: tuple[str, ...] = ("dcn", "host", "ici", "rdma", "sim")
+
+
+@pytest.fixture
+def expected_default_channels() -> set[str]:
+    return set(DEFAULT_CHANNELS)
 
 if importlib.util.find_spec("hypothesis") is None:
 

@@ -202,7 +202,7 @@ def _load_logical(ckpt_dir):
     return {k: np.asarray(v) for k, v in tree.items()}, step
 
 
-@pytest.mark.parametrize("backend", ["sim", "flow"])
+@pytest.mark.parametrize("backend", ["sim", "flow", "rdma"])
 def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
         tmp_path, shared_channel, backend):
     """The acceptance test: rank 5 dies mid-flight inside step 5's bucketed
@@ -211,11 +211,14 @@ def test_kill_rank_mid_bucketed_allreduce_regroup_bitexact_with_clean_restart(
     resumed trajectory is BIT-EXACT with a clean restart at world 4 from
     the very same checkpoint.
 
-    Runs on both software backends: the flow-level transport must heal
-    identically — same cancel accounting, same bit-exact trajectory —
-    since only its timing account differs (see docs/flowsim.md)."""
+    Runs on all three software backends: the flow-level transport and the
+    lease-based one-sided rdma transport must heal identically — same
+    cancel accounting, same bit-exact trajectory — since only their timing
+    accounts differ (see docs/flowsim.md, docs/rdma.md)."""
     if backend == "flow":
         from repro.core.flowsim import FlowTransport as make
+    elif backend == "rdma":
+        from repro.core.rdma import LeaseTransport as make
     else:
         make = SimTransport
     name, box = shared_channel

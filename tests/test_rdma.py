@@ -1,0 +1,374 @@
+"""Lease-based one-sided rdma channel (repro.core.rdma).
+
+Four check layers:
+
+1. **Lease state machine** — acquire/renew/expire transitions, including
+   property tests under randomized renew schedules: a lease is valid iff
+   its last renewal is within ``term`` ticks, renewing a lapsed lease is
+   refused, and re-acquisition always restores validity.
+2. **Expiry mid-collective** — a silent rank (``suspend_renew``) lapses
+   deterministically ``term`` ticks after its last renewal and the
+   touching exchange raises :class:`RankFailure` with
+   ``reason="lease-expired"``.
+3. **Regime crossover** — the selector picks ``rdma`` for the
+   8-bytes-per-rank decode argmax exchange and the host broker past the
+   modeled crossover (``selector.crossover_nbytes``), both directly and
+   through ``serve_plan``.
+4. **Elastic integration** — a lease lapse mid-step drives the full
+   detect → quiesce → regroup heal, the history entry records
+   ``evidence == "lease-expired"``, and the healed trajectory is
+   bit-exact with a clean restart (the kill-rank analogue lives in
+   ``test_elastic.py``'s rdma parametrization).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as A
+from repro.core import channels
+from repro.core.communicator import Communicator
+from repro.core.models import CHANNELS, ChannelSpec
+from repro.core.rdma import (
+    DEFAULT_LEASE_TERM,
+    Lease,
+    LeaseError,
+    LeaseTransport,
+)
+from repro.core.scheduler import CommScheduler
+from repro.core.selector import crossover_nbytes, select, serve_plan
+from repro.core.transport import RankFailure, SimTransport
+from repro.runtime import ElasticController, Membership
+
+
+# ---------------------------------------------------------------------------
+# 1. lease state machine
+# ---------------------------------------------------------------------------
+
+
+def test_lease_lifecycle_acquire_renew_expire_reacquire():
+    lease = Lease(rank=3, term=5)
+    assert lease.state == "released"
+    lease.acquire(now=10)
+    assert lease.state == "held" and lease.expires_at == 15
+    lease.renew(now=14)
+    assert lease.expires_at == 19
+    assert lease.valid(now=18)
+    assert not lease.valid(now=19)       # lapse is inclusive of expires_at
+    assert lease.state == "expired"
+    with pytest.raises(LeaseError, match="re-acquire"):
+        lease.renew(now=20)
+    lease.acquire(now=20)                # re-acquisition restores validity
+    assert lease.valid(now=24) and not lease.valid(now=25)
+
+
+def test_lease_invalid_transitions():
+    lease = Lease(rank=0, term=4)
+    lease.acquire(now=0)
+    with pytest.raises(LeaseError, match="already held"):
+        lease.acquire(now=1)
+    with pytest.raises(LeaseError, match="refused"):
+        lease.renew(now=4)               # renewal arriving at the deadline
+    assert lease.state == "expired"      # the late renewal flipped it
+    lease.release()
+    assert lease.state == "released"
+
+
+@settings(max_examples=60, deadline=None)
+@given(term=st.integers(min_value=2, max_value=9),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_lease_valid_iff_renewed_within_term(term, seed):
+    """Property: replay a randomized renew/advance schedule against the
+    reference predicate 'valid iff now < last_renewal + term'."""
+    rng = np.random.default_rng(seed)
+    lease = Lease(rank=0, term=term)
+    lease.acquire(now=0)
+    now, last = 0, 0
+    for _ in range(40):
+        now += int(rng.integers(0, term))
+        if rng.random() < 0.5:           # attempt a renewal
+            if now < last + term:
+                lease.renew(now)
+                last = now
+            else:
+                with pytest.raises(LeaseError):
+                    lease.renew(now)
+                lease.acquire(now)       # recover, keep the schedule running
+                last = now
+        assert lease.valid(now) == (now < last + term)
+
+
+# ---------------------------------------------------------------------------
+# 2. the transport: one-sided accounting + deterministic expiry
+# ---------------------------------------------------------------------------
+
+
+def test_lease_transport_trace_is_single_hop():
+    """One trace slot per exchange — identical to the sim oracle (the full
+    matrix is in test_transport_conformance.py; this is the hops=1 spec
+    consistency check)."""
+    assert CHANNELS["rdma"].hops == 1 and CHANNELS["rdma"].one_sided
+    P = 8
+    x = np.random.default_rng(0).normal(size=(P, P * 2)).astype(np.float32)
+    tr, ts = LeaseTransport(P), SimTransport(P)
+    a = A.allreduce_recursive_doubling(tr, x.copy(), "add")
+    b = A.allreduce_recursive_doubling(ts, x.copy(), "add")
+    assert np.array_equal(a, b)
+    assert tr.trace.per_slot == ts.trace.per_slot
+    spec = CHANNELS["rdma"]
+    assert tr.trace.time(spec.alpha, spec.beta) == pytest.approx(
+        ts.trace.time(spec.alpha, spec.beta))
+
+
+def test_warm_pool_and_registration_amortize():
+    """Cold connects and buffer registrations happen once; steady-state
+    rounds are all warm hits with zero new registrations."""
+    P = 4
+    t = LeaseTransport(P)
+    x = np.ones((P, 8), np.float32)
+    ring = [(r, (r + 1) % P) for r in range(P)]
+    t.ppermute(x, ring)
+    cold, regs = t.stats.cold_connects, t.stats.registrations
+    assert cold == P and t.stats.warm_hits == 0
+    for _ in range(5):
+        t.ppermute(x, ring)
+    assert t.stats.cold_connects == cold          # no new queue pairs
+    assert t.stats.registrations == regs          # no re-registration
+    assert t.stats.warm_hits == 5 * P
+    assert t.stats.puts == 6 * P
+    assert t.stats.registered_bytes == P * x[0].nbytes
+    # a larger payload forces re-registration (grow-only regions)
+    t.ppermute(np.ones((P, 64), np.float32), ring)
+    assert t.stats.registrations == regs + P
+
+
+def test_suspended_rank_lapses_deterministically():
+    """The lease of a silent rank expires exactly term ticks after its
+    last renewal — failure lands on a predictable round."""
+    P, term = 4, 6
+    t = LeaseTransport(P, lease_term=term)
+    x = np.ones((P, 4), np.float32)
+    ring = [(r, (r + 1) % P) for r in range(P)]
+    t.ppermute(x, ring)                  # t=1: all leases renewed at 1
+    t.suspend_renew(2)
+    for _ in range(term - 1):            # t=2..6 < expiry at 1+6
+        t.ppermute(x, ring)
+    with pytest.raises(RankFailure) as ei:
+        t.ppermute(x, ring)              # t=7 >= 7: lapse observed
+    assert ei.value.rank == 2 and ei.value.reason == "lease-expired"
+    assert t.stats.expiries == 1
+    assert t.leases[2].state == "expired"
+    # revive re-acquires: traffic flows again
+    t.revive(2)
+    assert t.leases[2].state == "held"
+    t.ppermute(x, ring)
+
+
+def test_expiry_mid_collective_raises_rank_failure():
+    """A recursive-doubling allreduce at P=8 issues 3 rounds; with a lease
+    expiring inside that window the failure surfaces mid-collective."""
+    P = 8
+    t = LeaseTransport(P, lease_term=2)
+    x = np.ones((P, 4), np.float32)
+    A.allreduce_recursive_doubling(t, x, "add")   # leases renewed along
+    t.suspend_renew(5)
+    with pytest.raises(RankFailure) as ei:
+        A.allreduce_recursive_doubling(t, x, "add")
+    assert ei.value.rank == 5 and ei.value.reason == "lease-expired"
+    # 3 rounds from the clean allreduce + exactly 1 from the failed one:
+    # the lapse lands on the second recursive-doubling round
+    assert t.trace.rounds == 4
+
+
+def test_kill_still_works_and_reports_rank_failure_reason():
+    """Inherited kill-based injection coexists with leases (its RankFailure
+    keeps the generic reason)."""
+    t = LeaseTransport(4)
+    t.kill(1)
+    with pytest.raises(RankFailure) as ei:
+        t.ppermute(np.ones((4, 2), np.float32), [(0, 1)])
+    assert ei.value.reason == "rank-failure"
+
+
+# ---------------------------------------------------------------------------
+# 3. regime crossover: rdma wins latency, hands over at the boundary
+# ---------------------------------------------------------------------------
+
+
+def test_selector_picks_rdma_for_decode_argmax_and_host_past_crossover():
+    P = 8
+    argmax_bytes = P * 2 * 4             # 8 B per rank: (max, argmax) f32
+    small = select("allgather", argmax_bytes, P, channels=("rdma", "host"))
+    assert small.channel == "rdma"
+    xb = crossover_nbytes("allreduce", P, "rdma", "host")
+    assert 1e4 < xb < 1e7                # a real interior boundary
+    below = select("allreduce", xb / 4, P, channels=("rdma", "host"))
+    above = select("allreduce", xb * 4, P, channels=("rdma", "host"))
+    assert below.channel == "rdma" and above.channel == "host"
+    # the same flip against the sim software oracle
+    xs = crossover_nbytes("allreduce", P, "rdma", "sim")
+    assert select("allreduce", 64, P, channels=("rdma", "sim")).channel == "rdma"
+    assert select("allreduce", xs * 4, P,
+                  channels=("rdma", "sim")).channel == "sim"
+
+
+def test_serve_plan_crosses_over_between_decode_and_prefill():
+    plan = serve_plan(d_model=4096, n_layers=32, vocab_size=128256, P=8,
+                      batch=4, prompt_len=2048, channels=("rdma", "host"),
+                      logits_mode="local-argmax")
+    assert plan.decode.allgather.channel == "rdma"   # 256 B exchange
+    assert plan.prefill.allreduce.channel == "host"  # 134 MB: bandwidth
+    # local-argmax emission is P * batch * (max, argmax) f32 — 8 B per rank
+    assert plan.decode.nbytes_allgather == 8 * 4 * 2 * 4
+    assert plan.prefill.nbytes_allreduce > 1e8
+
+
+def test_rdma_communicator_auto_selection_end_to_end():
+    """algorithm='auto' through a Communicator bound to rdma works: the
+    selector prices the channel's own spec and the transport executes."""
+    P = 4
+    comm = Communicator(axes=("w",), sizes=(P,), channel="rdma")
+    x = np.random.default_rng(3).normal(size=(P, 16)).astype(np.float32)
+    out = np.asarray(comm.allreduce(x))
+    np.testing.assert_allclose(out, np.broadcast_to(x.sum(0), x.shape),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flowsim_covers_one_sided_topology():
+    from repro.core.flowsim import Topology, compare_backends
+
+    topo = Topology.from_spec(CHANNELS["rdma"], 4)
+    assert topo.name == "onesided(P=4)"
+    assert set(topo.links) == {f"nic:{r}" for r in range(4)}
+    cmp = compare_backends("allreduce", "recursive_doubling", 1 << 10, 4,
+                           channel="rdma")
+    assert cmp.topology == "onesided(P=4)"
+    assert cmp.flow_s > 0 and cmp.modeled_s > 0
+
+
+# ---------------------------------------------------------------------------
+# 4. lease expiry drives the elastic heal (evidence + bit-exact trajectory)
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+LAYERS = (("w0", (4, 3)), ("w1", (7,)))
+LR = np.float32(0.05)
+
+
+def _grads_at(step, P):
+    return {
+        k: np.random.default_rng(1 + 13 * step + i)
+        .normal(size=(P,) + shape).astype(np.float32)
+        for i, (k, shape) in enumerate(LAYERS)
+    }
+
+
+def _sgd_steps(sched, params, steps):
+    for step in steps:
+        g = _grads_at(step, sched.comm.size)
+        for i in reversed(range(len(LAYERS))):
+            sched.submit(LAYERS[i][0], g[LAYERS[i][0]])
+        red = sched.drain()
+        params = {k: params[k] - LR * red[k] for k in params}
+    return params
+
+
+def _stack(logical, P):
+    return {k: np.broadcast_to(v, (P,) + v.shape).copy()
+            for k, v in logical.items()}
+
+
+def test_lease_expiry_drives_heal_with_evidence_and_bitexact_trajectory():
+    """A rank going silent (suspended renewals) — not killed — lapses its
+    lease mid-step; the controller heals through the standard protocol,
+    records the lease as the evidence, and the resumed trajectory is
+    bit-exact with a clean restart at the regrouped world."""
+    P = 8
+    box = {"t": LeaseTransport(P, lease_term=2)}
+    name = "rdma_lease_test_channel"
+    channels.register_channel(
+        ChannelSpec(name, alpha=2e-6, beta=1 / 2e9, kind="direct", push=True,
+                    one_sided=True),
+        transport_factory=lambda **kw: box["t"],
+        overwrite=True,
+    )
+    try:
+        state = {"comm": Communicator(axes=("data",), sizes=(P,), channel=name)}
+        state["sched"] = CommScheduler(state["comm"], mean=True,
+                                       algorithm="recursive_doubling",
+                                       bucket_bytes=64)
+        clk = _Clock()
+        m = Membership(expected=P, heartbeat_timeout=5.0, clock=clk)
+        for r in range(P):
+            m.join(r)
+        snapshot = {}
+
+        def rebuild(dp):
+            box["t"] = LeaseTransport(dp, lease_term=2)
+            state["comm"] = state["comm"].regroup(sizes=(dp,))
+            state["sched"] = CommScheduler(state["comm"], mean=True,
+                                           algorithm="recursive_doubling",
+                                           bucket_bytes=64)
+
+        def restore():
+            state["params"] = _stack(snapshot["logical"], state["comm"].size)
+            return snapshot["step"]
+
+        ctl = ElasticController(
+            membership=m, rebuild=rebuild, restore=restore,
+            quiesce=lambda: state["sched"].abort(state["comm"].generation),
+            strategy="pow2_floor", min_degree=2)
+
+        state["params"] = _stack(
+            {k: np.random.default_rng(0).normal(size=s).astype(np.float32)
+             for k, s in LAYERS}, P)
+        state["params"] = _sgd_steps(state["sched"], state["params"],
+                                     range(0, 2))
+        snapshot["logical"] = {k: v[0].copy()
+                               for k, v in state["params"].items()}
+        snapshot["step"] = 2
+
+        box["t"].suspend_renew(5)        # rank 5 goes silent, NOT killed
+        healed = ctl.step_or_heal(
+            lambda: state.update(
+                params=_sgd_steps(state["sched"], state["params"], [2])))
+        assert healed
+        h = ctl.history[0]
+        assert h["evidence"] == "lease-expired"
+        assert h["dp"] == 4 and h["survivors"] == 7 and h["step"] == 2
+        assert state["comm"].size == 4 and state["comm"].generation == 1
+
+        faulted = _sgd_steps(state["sched"], state["params"], range(2, 6))
+
+        # clean restart at world 4 from the same snapshot
+        box["t"] = LeaseTransport(4, lease_term=2)
+        comm2 = Communicator(axes=("data",), sizes=(4,), channel=name)
+        sched2 = CommScheduler(comm2, mean=True,
+                               algorithm="recursive_doubling",
+                               bucket_bytes=64)
+        clean = _sgd_steps(sched2, _stack(snapshot["logical"], 4),
+                           range(2, 6))
+        for k in faulted:
+            assert np.array_equal(faulted[k], clean[k]), k
+    finally:
+        channels.unregister(name)
+
+
+def test_default_lease_term_outlives_tier1_collectives():
+    """Sanity: the default term (with traffic-driven renewal every tick)
+    never lapses a healthy rank across a long schedule."""
+    P = 8
+    t = LeaseTransport(P)                # DEFAULT_LEASE_TERM
+    x = np.ones((P, 4), np.float32)
+    for _ in range(3 * DEFAULT_LEASE_TERM):
+        A.allreduce_recursive_doubling(t, x, "add")
+    assert t.stats.expiries == 0
+    assert all(lease.state == "held" for lease in t.leases.values())

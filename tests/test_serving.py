@@ -141,13 +141,15 @@ def test_engine_submit_validation():
             eng.submit([1, 2, 3], max_new=9)  # 3 pages > 2-page pool
 
 
-def test_engine_close_unregisters_channel():
+def test_engine_close_unregisters_channel(expected_default_channels):
     eng = _engine()
     name = eng.channel
     assert name in channels.names()
     # private registration: resolvable by name, never enumerated into
-    # unrelated algorithm='auto' selections
-    assert name not in channels.default_channels()
+    # unrelated algorithm='auto' selections (the default set stays exactly
+    # the canonical conftest tuple)
+    assert name not in expected_default_channels
+    assert set(channels.default_channels()) == expected_default_channels
     eng.close()
     assert name not in channels.names()
     eng.close()  # idempotent

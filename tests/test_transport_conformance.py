@@ -1,0 +1,218 @@
+"""Differential conformance suite for every registered transport.
+
+One parametrized matrix replaces the per-transport ad-hoc copies that used
+to live in ``test_channels.py`` (host-vs-oracle allreduce) and
+``test_flowsim.py`` (sim-vs-flow differential sweep): every
+transport-capable software channel in the registry — ``sim``, ``host``,
+``flow``, ``rdma`` — runs every ``ALGORITHMS`` op × algorithm on every
+pow2 world, instantiated through the channel registry exactly as a
+communicator would, and must
+
+* produce **bit-exact payloads** against the ``SimTransport`` oracle
+  (a channel may change *time*, never *bytes*),
+* keep the hops-scaled :class:`~repro.core.transport.ChannelTrace`
+  account — ``rounds`` and ``bytes_per_rank`` scale by the spec's
+  ``hops`` (the broker's GET hop doubles both; one-sided/flat channels
+  match the oracle slot-for-slot), and
+* honor the **issue/wait contract** through the request layer: cancel
+  closes the pending trace slot, ``isend``/``irecv`` tag matching (and
+  collision/missing-tag errors), and generation stamping for the elastic
+  quiesce protocol.
+
+Transport-specific leak invariants ride along per case: the host broker
+must end every collective with zero live staged keys, and the rdma lease
+channel must end with every lease still held and no expiries observed.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as A
+from repro.core import channels as CH
+from repro.core import requests as RQ
+from repro.core.communicator import Communicator
+from repro.core.models import CHANNELS, feasible
+from repro.core.requests import CancelledError
+from repro.core.transport import SimTransport
+
+#: Software transports the registry can instantiate standalone.  The
+#: mesh-bound jax channels (ici/dcn/xla) need shard_map and are covered by
+#: tests/test_multidevice.py.
+TRANSPORTS = ("sim", "host", "flow", "rdma")
+
+POW2_WORLDS = (1, 2, 4, 8, 16)
+CASES = [(op, algo) for op, algos in A.ALGORITHMS.items()
+         for algo in sorted(algos)]
+
+
+def _make(name, P):
+    """Instantiate through the registry — the same path a communicator
+    takes, so factory plumbing is part of what the matrix certifies."""
+    return CH.get_channel(name).make_transport(size=P)
+
+
+def _payload(op, P, seed=0):
+    rng = np.random.default_rng(seed + 101 * P)
+    if op in ("allreduce", "reduce_scatter"):  # chunked: need P | elements
+        return rng.normal(size=(P, P * 3)).astype(np.float32)
+    if op in ("bcast", "reduce", "scan"):
+        return rng.normal(size=(P, 8)).astype(np.float32)
+    if op in ("allgather", "gather"):
+        return rng.normal(size=(P, 3)).astype(np.float32)
+    if op in ("alltoall", "scatter"):
+        return rng.normal(size=(P, P, 2)).astype(np.float32)
+    if op == "barrier":
+        return None
+    raise KeyError(op)
+
+
+def _invoke(t, op, algo, x, reduction="add"):
+    fn = A.ALGORITHMS[op][algo]
+    if op in ("allreduce", "reduce_scatter", "scan"):
+        return fn(t, x, reduction)
+    if op == "reduce":
+        return fn(t, x, reduction, 0)
+    if op in ("bcast", "scatter"):
+        return fn(t, x, 0)
+    if op in ("allgather", "gather", "alltoall"):
+        return fn(t, x)
+    if op == "barrier":
+        return fn(t)
+    raise KeyError(op)
+
+
+def _check_leak_free(name, t):
+    """Per-transport resource invariants after a completed collective."""
+    if name == "host":
+        assert t.broker.stats.live_keys == 0, "staged broker keys leaked"
+    if name == "rdma":
+        assert t.stats.expiries == 0
+        assert all(lease.state == "held" for lease in t.leases.values())
+
+
+# ---------------------------------------------------------------------------
+# 1. the differential matrix: payloads bit-exact, traces hops-consistent
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("P", POW2_WORLDS)
+@pytest.mark.parametrize("op,algo", CASES)
+def test_bit_exact_vs_oracle(transport, op, algo, P):
+    if not feasible(op, algo, P):
+        pytest.skip(f"{op}/{algo} infeasible at P={P}")
+    hops = CHANNELS[transport].hops
+    reductions = (("add", "max") if op in ("allreduce", "reduce",
+                                           "reduce_scatter", "scan")
+                  else ("add",))
+    for red in reductions:
+        x = _payload(op, P)
+        oracle, t = SimTransport(P), _make(transport, P)
+        a = _invoke(oracle, op, algo, None if x is None else x.copy(), red)
+        b = _invoke(t, op, algo, None if x is None else x.copy(), red)
+        if a is not None:  # barrier returns nothing
+            assert np.array_equal(np.asarray(a), np.asarray(b)), \
+                (transport, op, algo, P, red)
+        # the trace is the object the α-β model prices: hops=1 channels
+        # must match the oracle slot-for-slot, the hops=2 broker records
+        # one extra serialized hop per exchange — same payload both ways
+        assert t.trace.rounds == hops * oracle.trace.rounds, \
+            (transport, op, algo, P, red)
+        assert t.trace.bytes_per_rank == hops * oracle.trace.bytes_per_rank
+        if hops == 1:
+            assert t.trace.per_slot == oracle.trace.per_slot
+        assert t.trace.pending == 0, "unclosed pending slot"
+        _check_leak_free(transport, t)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+@pytest.mark.parametrize("P", (3, 5, 6))
+def test_non_pow2_allreduce_spot_check(transport, P):
+    """Every transport handles non-pow2 worlds (recursive doubling's
+    fold-in/fold-out path) — the non-pow2 leg the pow2 matrix skips."""
+    x = np.random.default_rng(P).normal(size=(P, 6)).astype(np.float32)
+    t = _make(transport, P)
+    out = _invoke(t, "allreduce", "recursive_doubling", x.copy(), "add")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.broadcast_to(x.sum(0), x.shape),
+                               rtol=1e-5, atol=1e-5)
+    assert t.trace.pending == 0
+    _check_leak_free(transport, t)
+
+
+# ---------------------------------------------------------------------------
+# 2. issue/wait contract: cancel, tag matching, generation stamping
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_cancel_closes_pending_slot(transport):
+    t = _make(transport, 4)
+    x = np.ones((4, 8), np.float32)
+    treq = t.ppermute_start(x, [(r, (r + 1) % 4) for r in range(4)])
+    assert t.trace.pending == 1
+    treq.cancel()
+    assert treq.cancelled
+    assert t.trace.pending == 0, "cancel must close the pending trace slot"
+    assert treq.wait() is None  # transport-level cancelled wait yields None
+    _check_leak_free(transport, t)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_isend_irecv_tag_matching(transport):
+    t = _make(transport, 4)
+    shift = [(r, (r + 1) % 4) for r in range(4)]
+    a = np.arange(16, dtype=np.float32).reshape(4, 4)
+    b = -a
+    sa = RQ.isend(a, t, shift, tag="alpha")
+    sb = RQ.isend(b, t, shift, tag="beta")
+    # same tag while in flight: collision
+    with pytest.raises(ValueError, match="collision"):
+        RQ.isend(a, t, shift, tag="alpha")
+    # receives match by tag, not issue order
+    rb = RQ.irecv(t, tag="beta")
+    ra = RQ.irecv(t, tag="alpha")
+    got_b, got_a = rb.wait(), ra.wait()
+    assert np.array_equal(np.asarray(got_a)[1], a[0])
+    assert np.array_equal(np.asarray(got_b)[1], b[0])
+    sa.wait(), sb.wait()
+    # no matching isend: error names the tag
+    with pytest.raises(ValueError, match="no matching isend"):
+        RQ.irecv(t, tag="gamma")
+    assert t.trace.pending == 0
+    _check_leak_free(transport, t)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_abort_mailbox_quiesces_unmatched_sends(transport):
+    t = _make(transport, 2)
+    x = np.ones((2, 4), np.float32)
+    RQ.isend(x, t, [(0, 1), (1, 0)], tag=1)
+    RQ.isend(x, t, [(0, 1), (1, 0)], tag=2)
+    assert RQ.abort_mailbox(t) == 2
+    assert t.trace.pending == 0
+    _check_leak_free(transport, t)
+
+
+@pytest.mark.parametrize("transport", TRANSPORTS)
+def test_generation_stamping_and_selective_cancel(transport):
+    """Requests carry their communicator's generation; after a regroup,
+    cancel_all(old generation) aborts exactly the stale traffic."""
+    comm = Communicator(axes=("d",), sizes=(4,), channel=transport)
+    x = np.ones((4, 8), np.float32)
+    q = RQ.RequestQueue()
+    # a finalize keeps the request in flight until wait (the bucketed
+    # trainer's shape) — without one, lockstep channels complete at issue
+    # and there is nothing left to cancel
+    stale = q.push(RQ.iallreduce(x, comm, finalize=lambda v: v))
+    assert stale.generation == comm.generation == 0
+    comm2 = comm.regroup()
+    assert comm2.generation == 1
+    fresh = q.push(RQ.iallreduce(x, comm2, finalize=lambda v: v))
+    assert fresh.generation == 1
+    assert q.cancel_all(generation=0) == 1
+    assert stale.cancelled and not fresh.cancelled
+    with pytest.raises(CancelledError):
+        stale.wait()
+    out = fresh.wait()
+    assert np.array_equal(np.asarray(out), np.full((4, 8), 4, np.float32))

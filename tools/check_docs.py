@@ -41,6 +41,7 @@ DOCTEST_MODULES = (
     "repro.core.pricing",
     "repro.core.compression",
     "repro.core.flowsim",
+    "repro.core.rdma",
     "repro.core.selector",
     "repro.kernels.paged_attention",
     "repro.runtime.membership",
