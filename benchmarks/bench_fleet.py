@@ -1,0 +1,143 @@
+"""Fleet economics: tok/s, p50/p99, shed rate, $/1M tokens vs offered load.
+
+Three fleets replay the same seeded traces (``serving/traffic.py``) on the
+virtual clock — a **fixed-1** fleet (cheap, sheds under load), a
+**fixed-4** fleet (meets the burst, idles at the trough), and an
+**autoscaled** fleet (1..4 replicas under the SLO-driven
+``fleet.Autoscaler``) — at a low and a high offered load.  The claim the
+acceptance thresholds pin is the autoscaler's whole point:
+
+* at **high** load it matches or beats fixed-1 throughput (it scales out
+  instead of shedding), and
+* at **low** load it matches or beats fixed-4 cost per token (it scales
+  in instead of idling four replicas).
+
+``python -m benchmarks.bench_fleet`` exits 1 when either threshold is
+unmet; the artifact lands in ``benchmarks/artifacts/fleet/fleet.json``
+with per-(fleet, load) cells plus the acceptance verdicts.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.serving.fleet import Autoscaler, FleetController
+from repro.serving.tp_lm import TPServeConfig
+from repro.serving.traffic import TrafficConfig, generate
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "fleet")
+TICK_S = 1e-3
+SLO_P99_MS = 20.0
+MAX_REPLICAS = 4
+
+CFG = TPServeConfig(vocab_size=256, d_model=64, n_heads=4, head_dim=16,
+                    d_ff=128, n_layers=2, max_len=16, ff_chunks=4)
+
+# offered-load points: well under one replica's capacity, and well over it
+LOADS = {
+    "low": TrafficConfig(seed=0, pattern="poisson", rate_rps=150.0,
+                         duration_s=0.06, vocab_size=CFG.vocab_size,
+                         prompt_mix=((2, 5, 1.0),),
+                         output_mix=((2, 5, 1.0),)),
+    "high": TrafficConfig(seed=1, pattern="diurnal", rate_rps=600.0,
+                          burst=4.0, period_s=0.03, duration_s=0.06,
+                          vocab_size=CFG.vocab_size,
+                          prompt_mix=((2, 5, 1.0),),
+                          output_mix=((2, 5, 1.0),)),
+}
+
+FLEETS = ("fixed-1", "fixed-4", "autoscaled")
+
+
+def _controller(name: str) -> FleetController:
+    kw = dict(tick_s=TICK_S, max_slots=4, kv_pages=32, page_size=4,
+              max_queue=8, seed=0)
+    if name == "fixed-1":
+        return FleetController(CFG, n_replicas=1, **kw)
+    if name == "fixed-4":
+        return FleetController(CFG, n_replicas=4, **kw)
+    return FleetController(
+        CFG, n_replicas=1,
+        autoscaler=Autoscaler(slo_p99_ms=SLO_P99_MS, min_replicas=1,
+                              max_replicas=MAX_REPLICAS),
+        max_replicas=MAX_REPLICAS, **kw)
+
+
+def _cell(fleet_name: str, load_name: str) -> dict:
+    trace = generate(LOADS[load_name])
+    t0 = time.perf_counter()
+    with _controller(fleet_name) as fleet:
+        rep = fleet.run_trace(trace)
+    wall = time.perf_counter() - t0
+    return dict(
+        fleet=fleet_name, load=load_name,
+        offered=len(trace.requests), served=len(rep.tokens),
+        shed=len(rep.shed), shed_rate=rep.shed_rate,
+        tokens=rep.tokens_emitted, ticks=rep.ticks,
+        tok_per_vs=rep.tok_per_vs, p50_ms=rep.p50_ms, p99_ms=rep.p99_ms,
+        usd_per_mtok=rep.usd_per_mtok, replica_ticks=rep.replica_ticks,
+        scale_events=len(rep.decisions), wall_s=wall,
+    )
+
+
+def run():
+    cells = {(c["fleet"], c["load"]): c
+             for c in (_cell(f, l) for f in FLEETS for l in LOADS)}
+    # acceptance: the autoscaler earns its complexity at both extremes
+    auto_hi, fix1_hi = cells[("autoscaled", "high")], cells[("fixed-1", "high")]
+    auto_lo, fix4_lo = cells[("autoscaled", "low")], cells[("fixed-4", "low")]
+    acceptance = {
+        "high_load_throughput_ge_fixed1": {
+            "autoscaled_tok_per_vs": auto_hi["tok_per_vs"],
+            "fixed1_tok_per_vs": fix1_hi["tok_per_vs"],
+            "ok": auto_hi["tok_per_vs"] >= fix1_hi["tok_per_vs"],
+        },
+        "low_load_cost_le_fixed4": {
+            "autoscaled_usd_per_mtok": auto_lo["usd_per_mtok"],
+            "fixed4_usd_per_mtok": fix4_lo["usd_per_mtok"],
+            "ok": auto_lo["usd_per_mtok"] <= fix4_lo["usd_per_mtok"],
+        },
+    }
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "fleet.json"), "w") as f:
+        json.dump({
+            "config": CFG.__dict__, "tick_s": TICK_S,
+            "slo_p99_ms": SLO_P99_MS, "max_replicas": MAX_REPLICAS,
+            "cells": list(cells.values()), "acceptance": acceptance,
+        }, f, indent=1)
+
+    rows = []
+    for (fleet, load), c in cells.items():
+        rows.append((
+            f"fleet/{fleet}/{load}",
+            c["wall_s"] * 1e6 / max(1, c["tokens"]),
+            f"tok/s={c['tok_per_vs']:.0f} p50={c['p50_ms']:.1f}ms "
+            f"p99={c['p99_ms']:.1f}ms shed={100*c['shed_rate']:.1f}% "
+            f"$per_mtok={c['usd_per_mtok']:.4f} "
+            f"scale_events={c['scale_events']}",
+        ))
+    for name, a in acceptance.items():
+        rows.append((f"fleet/acceptance/{name}", None,
+                     "ok" if a["ok"] else "FAIL"))
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    print("name,us_per_call,derived")
+    for n, us, derived in rows:
+        print(f"{n},{us if us is None else f'{us:.2f}'},{derived}")
+    with open(os.path.join(ART, "fleet.json")) as f:
+        acceptance = json.load(f)["acceptance"]
+    bad = [k for k, v in acceptance.items() if not v["ok"]]
+    if bad:
+        print(f"acceptance FAILED: {bad}", file=sys.stderr)
+        sys.exit(1)
+    print("acceptance ok")
+
+
+if __name__ == "__main__":
+    main()

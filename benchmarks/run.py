@@ -17,6 +17,8 @@ Mapping to the paper:
                     (docs/elasticity.md; kill-rank -> quiesce/regroup/reshard)
     serving      -> continuous-batching tokens/s + modeled $/1M tokens vs
                     world and batch (docs/serving.md)
+    fleet        -> autoscaled fleet vs fixed fleets: tok/s, p99, shed
+                    rate, $/1M tokens vs offered load (docs/fleet.md)
     kernels      -> Pallas kernel throughput vs naive references
     roofline     -> §Roofline reader over the dry-run artifacts
 """
@@ -37,6 +39,7 @@ BENCHES = [
     "overlap",
     "elastic",
     "serving",
+    "fleet",
     "kernels",
     "roofline",
 ]

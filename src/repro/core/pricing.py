@@ -94,6 +94,46 @@ def usd_per_mtok(P: int, step_s: float, tokens_per_step: float,
     return P * step_s * p_chip_s / tokens_per_step * 1e6
 
 
+def usd_per_mtok_at_slo(
+    chips: int,
+    offered_tps: float,
+    modeled_p99_ms: float,
+    slo_p99_ms: float,
+    p_chip_s: float = P_CHIP_S,
+    cold_start_chip_s: float = 0.0,
+    horizon_s: float = 3600.0,
+) -> float:
+    """$/1M-tokens **at an SLO**: the fleet extension of
+    :func:`usd_per_mtok`.  A deployment of ``chips`` chips serving
+    ``offered_tps`` tokens/s is only *worth* its price if its modeled p99
+    meets the latency SLO — an infeasible deployment costs ``inf`` (you
+    cannot buy back a missed SLO with a lower bill).  ``cold_start_chip_s``
+    amortizes replica boot time (the ``restart_cost_s`` analogue: chip-
+    seconds spent booting rather than serving) over ``horizon_s`` of
+    steady traffic, which is what makes scale-out — more, smaller
+    replicas, each a potential cold start — pay a real premium over
+    scale-up in :func:`repro.core.selector.fleet_plan`.
+
+    >>> round(usd_per_mtok_at_slo(8, 1000.0, 40.0, 50.0), 4)
+    2.6667
+    >>> usd_per_mtok_at_slo(8, 1000.0, 60.0, 50.0)   # misses the SLO
+    inf
+    >>> a = usd_per_mtok_at_slo(8, 1000.0, 40.0, 50.0)
+    >>> b = usd_per_mtok_at_slo(8, 1000.0, 40.0, 50.0,
+    ...                         cold_start_chip_s=16.0)
+    >>> b > a                      # cold starts are not free
+    True
+    """
+    if offered_tps <= 0:
+        raise ValueError("offered_tps must be positive")
+    if slo_p99_ms <= 0:
+        raise ValueError("slo_p99_ms must be positive")
+    if modeled_p99_ms > slo_p99_ms:
+        return float("inf")
+    usd_per_s = chips * p_chip_s + cold_start_chip_s * p_chip_s / horizon_s
+    return usd_per_s / offered_tps * 1e6
+
+
 def p2p_exchange_cost(
     channel_name: str,
     nbytes: float = 1e6,

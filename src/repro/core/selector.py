@@ -595,6 +595,185 @@ def explain_serve_plan(
 
 
 # ---------------------------------------------------------------------------
+# Fleet planning — scale-up (bigger TP) vs scale-out (more replicas) at an
+# SLO (see serving/fleet.py and docs/fleet.md)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FleetOption:
+    """One candidate fleet shape: ``replicas`` TP-``tp`` engines.
+
+    ``modeled_p99_ms`` is the M/D/1-style sojourn bound at the offered
+    load (``inf`` when the shape cannot keep up); ``usd_per_mtok`` is
+    :func:`repro.core.pricing.usd_per_mtok_at_slo` — ``inf`` when the
+    shape misses the SLO, so an infeasible shape can never win on price."""
+
+    tp: int
+    replicas: int
+    mode: str  # 'scale-up' | 'scale-out' | 'hybrid'
+    chips: int
+    step_s: float  # one replica's modeled decode step
+    capacity_tps: float  # fleet-wide token throughput ceiling
+    utilization: float
+    modeled_p99_ms: float
+    usd_per_mtok: float
+
+
+@dataclass(frozen=True)
+class FleetPlan:
+    """The fleet cost model's answer: every (tp, replicas) shape on the
+    grid, priced at the offered load against the p99 SLO, with ``best``
+    the cheapest feasible shape (deterministic tie-break: fewer chips,
+    lower p99, fewer replicas, lower tp)."""
+
+    offered_tps: float
+    slo_p99_ms: float
+    options: tuple[FleetOption, ...]
+    best: FleetOption
+
+
+def fleet_plan(
+    d_model: int,
+    n_layers: int,
+    vocab_size: int,
+    offered_tps: float,
+    slo_p99_ms: float,
+    batch: int = 8,
+    prompt_len: int = 64,
+    tokens_per_request: int = 32,
+    channels: tuple[str, ...] | None = None,
+    max_chips: int = 32,
+    tp_grid: tuple[int, ...] = (1, 2, 4, 8),
+    replica_grid: tuple[int, ...] = (1, 2, 4, 8),
+    cold_start_s: float = 2.0,
+    horizon_s: float = 3600.0,
+    **serve_kwargs,
+) -> FleetPlan:
+    """Price *scale-up vs scale-out* for a serving deployment.
+
+    Both axes spend chips, but differently: **scale-up** (bigger TP per
+    replica) shrinks the decode step via the same α-β collective terms
+    :func:`serve_plan` prices — it buys *latency*, the only way to meet a
+    tight SLO — while **scale-out** (more replicas) multiplies throughput
+    at constant step time and pays a cold-start premium (``cold_start_s``
+    of boot per chip, the serving analogue of :func:`restart_cost_s`,
+    amortized over ``horizon_s``) — it buys *cheap capacity*.  Each
+    (tp, replicas) shape on the grid gets a modeled p99 from an
+    M/D/1-style sojourn bound — service time ``tokens_per_request ·
+    step_s`` inflated by ``1/(1-utilization)`` at the offered load — and
+    a $/1M-tokens-at-SLO price (``inf`` when the SLO is missed), so the
+    winner is the cheapest shape that actually meets the SLO:
+
+    >>> plan = fleet_plan(d_model=1024, n_layers=8, vocab_size=32000,
+    ...                   offered_tps=20000.0, slo_p99_ms=40.0,
+    ...                   channels=("ici",))
+    >>> plan.best.usd_per_mtok < float("inf")  # a feasible shape exists
+    True
+    >>> all(o.usd_per_mtok == float("inf") for o in plan.options
+    ...     if o.modeled_p99_ms > plan.slo_p99_ms)  # SLO-miss never wins
+    True
+    >>> tight = fleet_plan(d_model=1024, n_layers=8, vocab_size=32000,
+    ...                    offered_tps=20000.0, slo_p99_ms=4.0,
+    ...                    channels=("ici",))
+    >>> tight.best.tp >= plan.best.tp   # tighter SLO -> buy latency (TP)
+    True
+
+    When no shape meets the SLO the plan still answers — ``best`` is the
+    lowest-p99 shape (what you would have to relax toward) with an
+    ``inf`` price."""
+    from .pricing import usd_per_mtok_at_slo
+
+    if offered_tps <= 0:
+        raise ValueError("offered_tps must be positive")
+    options: list[FleetOption] = []
+    for tp in tp_grid:
+        sp = serve_plan(d_model, n_layers, vocab_size, P=tp, batch=batch,
+                        prompt_len=prompt_len, channels=channels,
+                        **serve_kwargs)
+        step_s = sp.decode.step_s
+        per_replica_tps = batch / step_s
+        for replicas in replica_grid:
+            chips = tp * replicas
+            if chips > max_chips:
+                continue
+            capacity = replicas * per_replica_tps
+            util = offered_tps / capacity
+            service_s = tokens_per_request * step_s
+            if util < 1.0:
+                p99_ms = service_s / (1.0 - util) * 1e3
+            else:
+                p99_ms = float("inf")
+            usd = usd_per_mtok_at_slo(
+                chips, offered_tps, p99_ms, slo_p99_ms,
+                cold_start_chip_s=chips * cold_start_s,
+                horizon_s=horizon_s)
+            mode = ("scale-up" if replicas == 1
+                    else "scale-out" if tp == 1 else "hybrid")
+            options.append(FleetOption(
+                tp=tp, replicas=replicas, mode=mode, chips=chips,
+                step_s=step_s, capacity_tps=capacity, utilization=util,
+                modeled_p99_ms=p99_ms, usd_per_mtok=usd))
+    if not options:
+        raise ValueError("grid empty under max_chips")
+    feasible = [o for o in options if o.usd_per_mtok < float("inf")]
+    if feasible:
+        best = min(feasible, key=lambda o: (o.usd_per_mtok, o.chips,
+                                            o.modeled_p99_ms, o.replicas,
+                                            o.tp))
+    else:
+        best = min(options, key=lambda o: (o.modeled_p99_ms, o.chips,
+                                           o.replicas, o.tp))
+    return FleetPlan(offered_tps=offered_tps, slo_p99_ms=slo_p99_ms,
+                     options=tuple(options), best=best)
+
+
+def explain_fleet_plan(
+    d_model: int,
+    n_layers: int,
+    vocab_size: int,
+    offered_tps: float,
+    slo_p99_ms: float,
+    **kwargs,
+) -> str:
+    """The fleet grid as a table — what ``launch/serve.py --fleet N
+    --slo-p99-ms X --explain`` prints: per (tp × replicas) shape the chip
+    count, step time, capacity, utilization at the offered load, modeled
+    p99 against the SLO, and the $/1M-tokens-at-SLO price; ``*`` marks
+    the winner."""
+    plan = fleet_plan(d_model, n_layers, vocab_size, offered_tps,
+                      slo_p99_ms, **kwargs)
+    lines = [
+        f"fleet plan: offered {offered_tps:.0f} tok/s, "
+        f"SLO p99 <= {slo_p99_ms:g}ms",
+        f"  {'shape':12s} {'mode':10s} {'chips':>5s} {'step':>9s} "
+        f"{'capacity':>10s} {'util':>6s} {'p99':>10s} {'$/Mtok':>9s}",
+        "  " + "-" * 78,
+    ]
+    for o in plan.options:
+        star = "*" if o is plan.best else " "
+        p99 = "inf" if o.modeled_p99_ms == float("inf") else f"{o.modeled_p99_ms:.2f}ms"
+        usd = "miss" if o.usd_per_mtok == float("inf") else f"{o.usd_per_mtok:.4f}"
+        lines.append(
+            f"{star} tp={o.tp:<2d}x r={o.replicas:<3d} {o.mode:10s} "
+            f"{o.chips:5d} {o.step_s*1e3:7.3f}ms {o.capacity_tps:8.0f}t/s "
+            f"{o.utilization*100:5.1f}% {p99:>10s} {usd:>9s}"
+        )
+    b = plan.best
+    verdict = ("no shape meets the SLO; closest is"
+               if b.usd_per_mtok == float("inf") else "best:")
+    lines.append(
+        f"-> {verdict} tp={b.tp} x {b.replicas} replicas ({b.mode}, "
+        f"{b.chips} chips): p99 "
+        + ("inf" if b.modeled_p99_ms == float("inf")
+           else f"{b.modeled_p99_ms:.2f}ms")
+        + (f", ${b.usd_per_mtok:.4f}/1M tokens"
+           if b.usd_per_mtok < float("inf") else "")
+    )
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
 # Rescale planning — continue degraded vs. regroup now (the elastic runtime's
 # cost question; see runtime/elastic.py and docs/elasticity.md)
 # ---------------------------------------------------------------------------

@@ -22,6 +22,16 @@ reduced configs.
 
     # CI smoke (tiny end-to-end run, exits 0):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --dry-run
+
+    # a 2-replica fleet replaying a seeded Poisson trace, autoscaling to 4
+    # against a 30ms p99 SLO on the virtual clock:
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --fleet 2 --autoscale --max-replicas 4 --slo-p99-ms 30 \
+        --rate-rps 300 --duration-s 0.05
+
+    # scale-up vs scale-out priced at the SLO (the fleet_plan table):
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
+        --fleet 2 --slo-p99-ms 50 --explain
 """
 
 from __future__ import annotations
@@ -72,6 +82,84 @@ def _explain(cfg, args) -> None:
             channels=(eng.channel,), logits_mode=args.logits_mode,
             flops_per_token=scfg.flops_per_token,
             kv_dtype=args.kv_dtype))
+
+
+def _explain_fleet(cfg, args) -> None:
+    from ..core.selector import explain_fleet_plan
+
+    offered = args.offered_tps
+    if offered is None:
+        offered = args.rate_rps * args.max_new  # trace load in tokens/s
+    print(f"fleet plan for {cfg.name} (full config, {args.channel} "
+          f"channel, scale-up vs scale-out at the SLO):\n")
+    print(explain_fleet_plan(
+        cfg.d_model, cfg.n_layers, cfg.vocab_size,
+        offered_tps=offered, slo_p99_ms=args.slo_p99_ms,
+        batch=args.batch * 4, tokens_per_request=args.max_new,
+        channels=(args.channel,), logits_mode=args.logits_mode,
+    ))
+
+
+def _fleet_trace(scfg, args):
+    from ..serving.traffic import Trace, TrafficConfig, generate
+
+    if args.trace:
+        return Trace.load(args.trace).clipped(scfg.max_len)
+    plen = max(1, args.prompt_len)
+    return generate(TrafficConfig(
+        seed=args.seed, pattern=args.traffic_pattern,
+        rate_rps=args.rate_rps, duration_s=args.duration_s,
+        burst=args.burst, period_s=args.period_s,
+        vocab_size=scfg.vocab_size,
+        prompt_mix=((max(1, plen // 2), plen, 1.0),),
+        output_mix=((max(1, args.max_new // 2), args.max_new, 1.0),),
+    ))
+
+
+def _run_fleet(cfg, args) -> None:
+    from ..serving.fleet import Autoscaler, FleetController
+
+    scfg = _tp_config(cfg, args.prompt_len, args.max_new)
+    trace = _fleet_trace(scfg, args)
+    stats = trace.stats()
+    print(f"trace: {stats['n_requests']} requests over "
+          f"{stats['duration_s']}s virtual ({args.traffic_pattern}"
+          f"{'' if args.trace is None else ' from ' + args.trace}, "
+          f"peak {stats['peak_rate_rps']:.0f} rps)")
+    autoscaler = None
+    if args.autoscale:
+        autoscaler = Autoscaler(slo_p99_ms=args.slo_p99_ms,
+                                min_replicas=args.fleet,
+                                max_replicas=args.max_replicas)
+    kill = None
+    if args.kill_replica is not None:
+        kill = (args.kill_replica, args.kill_at_tick)
+    t0 = time.perf_counter()
+    with FleetController(
+        scfg, n_replicas=args.fleet, tp=args.tp, max_slots=args.batch,
+        kv_pages=args.kv_pages, page_size=args.page_size, seed=args.seed,
+        logits_mode=args.logits_mode, kv_dtype=args.kv_dtype,
+        attn_backend=args.attn, router=args.router,
+        max_queue=args.max_queue, autoscaler=autoscaler,
+        max_replicas=args.max_replicas, tick_s=args.tick_ms * 1e-3,
+    ) as fleet:
+        report = fleet.run_trace(trace, kill_replica_at=kill)
+    dt = time.perf_counter() - t0
+    for d in report.decisions:
+        print(f"tick {d.tick}: {d.action} -> {d.replicas} replicas "
+              f"(queue {d.queue_depth}, modeled p99 "
+              f"{d.modeled_p99_ms:.1f}ms): {d.reason}")
+    for h in report.history:
+        print(f"membership commit gen {h['generation']}: dp={h['dp']} "
+              f"({h.get('evidence', 'heal')}, re-routed {h['step']})")
+    s = report.summary()
+    print(f"fleet served {s['requests']} requests / {s['tokens']} tokens "
+          f"in {s['ticks']} ticks ({report.tick_s*1e3:g}ms each): "
+          f"{s['tok_per_vs']:.0f} tok/s virtual, p50 {s['p50_ms']:.2f}ms, "
+          f"p99 {s['p99_ms']:.2f}ms, shed {s['shed']} "
+          f"({100*s['shed_rate']:.1f}%), ${s['usd_per_mtok']:.4f}/1M tok, "
+          f"{s['heals']} intra-replica heal(s), "
+          f"{s['scale_events']} scale event(s) [{dt:.2f}s wall]")
 
 
 def _run_continuous(cfg, args) -> None:
@@ -179,6 +267,39 @@ def main():
     ap.add_argument("--kill-rank", type=int, default=None,
                     help="inject a rank failure mid-decode (elastic demo)")
     ap.add_argument("--kill-at-step", type=int, default=2)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="run a FleetController over N engine replicas "
+                    "replaying a seeded traffic trace (0: single engine)")
+    ap.add_argument("--slo-p99-ms", type=float, default=50.0,
+                    help="p99 latency SLO for the autoscaler and the "
+                    "--explain fleet_plan table")
+    ap.add_argument("--offered-tps", type=float, default=None,
+                    help="offered load for --fleet --explain (default: "
+                    "rate-rps * max-new tokens/s)")
+    ap.add_argument("--router", choices=["least-loaded", "session-affine"],
+                    default="least-loaded")
+    ap.add_argument("--max-queue", type=int, default=8,
+                    help="per-replica admission queue depth before shed")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="enable SLO-driven scale-out/in between --fleet "
+                    "and --max-replicas")
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--trace", default=None,
+                    help="replay a JSON traffic fixture instead of "
+                    "generating one (see serving/traffic.py)")
+    ap.add_argument("--traffic-pattern", choices=["poisson", "diurnal"],
+                    default="poisson")
+    ap.add_argument("--rate-rps", type=float, default=200.0)
+    ap.add_argument("--duration-s", type=float, default=0.05)
+    ap.add_argument("--burst", type=float, default=4.0,
+                    help="diurnal peak/trough ratio")
+    ap.add_argument("--period-s", type=float, default=0.02)
+    ap.add_argument("--tick-ms", type=float, default=1.0,
+                    help="virtual seconds per fleet tick")
+    ap.add_argument("--kill-replica", type=int, default=None,
+                    help="fail a whole replica mid-trace (fleet elastic "
+                    "demo: its requests re-route, streams stay bit-exact)")
+    ap.add_argument("--kill-at-tick", type=int, default=5)
     ap.add_argument("--explain", action="store_true",
                     help="print the serve_plan tables (prefill + decode) "
                     "and exit")
@@ -195,18 +316,28 @@ def main():
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
 
     if args.explain:
-        _explain(cfg, args)
+        if args.fleet:
+            _explain_fleet(cfg, args)
+        else:
+            _explain(cfg, args)
         return
     if args.dry_run:
         args.requests = min(args.requests, 3)
         args.prompt_len = min(args.prompt_len, 4)
         args.max_new = min(args.max_new, 4)
         args.kv_pages = min(args.kv_pages, 16)
-        _run_continuous(cfg, args)
+        args.rate_rps = min(args.rate_rps, 200.0)
+        args.duration_s = min(args.duration_s, 0.02)
+        if args.fleet:
+            _run_fleet(cfg, args)
+        else:
+            _run_continuous(cfg, args)
         emit(san, args)
         print("dry-run ok")
         return
-    if args.batch_policy == "wave":
+    if args.fleet:
+        _run_fleet(cfg, args)
+    elif args.batch_policy == "wave":
         _run_wave(cfg, args)
     else:
         _run_continuous(cfg, args)

@@ -4,8 +4,19 @@ from .engine import (
     ServeEngine,
     make_serve_fns,
 )
+from .fleet import (
+    AdmissionController,
+    AdmissionDecision,
+    Autoscaler,
+    FleetController,
+    FleetReport,
+    Router,
+    ScaleDecision,
+    modeled_p99_s,
+)
 from .kv_cache import KVPageManifest, OutOfPages, PagedKVCache
 from .tp_lm import TPServeConfig
+from .traffic import Trace, TrafficConfig, TrafficRequest, generate
 
 __all__ = [
     "ServeConfig",
@@ -16,4 +27,16 @@ __all__ = [
     "KVPageManifest",
     "OutOfPages",
     "TPServeConfig",
+    "FleetController",
+    "FleetReport",
+    "Router",
+    "AdmissionController",
+    "AdmissionDecision",
+    "Autoscaler",
+    "ScaleDecision",
+    "modeled_p99_s",
+    "Trace",
+    "TrafficConfig",
+    "TrafficRequest",
+    "generate",
 ]

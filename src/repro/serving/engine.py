@@ -510,6 +510,30 @@ class ContinuousBatchingEngine:
             }
         return man
 
+    def evacuate(self) -> dict:
+        """Drain this replica for **fleet-level** re-routing
+        (:class:`repro.serving.fleet.FleetController`): snapshot the live
+        batch's KV-page manifest plus the not-yet-admitted queue, release
+        every page reservation, and return the evacuation record.  The KV
+        pages themselves are *not* shipped — exactly like the intra-engine
+        heal, the token histories in the manifest are the recoverable
+        state, and the receiving replica re-prefills them (prefill ≡
+        incremental decode bitwise, so the re-routed sequence continues on
+        the unfailed trajectory).  After evacuation the engine is empty
+        and :meth:`close` is leak-free under the sanitizer."""
+        record = {
+            "manifest": self.manifest(),
+            "waiting": tuple(
+                (sid, tuple(self._states[sid].prompt),
+                 self._states[sid].max_new)
+                for sid in self._waiting),
+        }
+        for sid in list(self._active):
+            self.kv.free(sid)
+        self._active.clear()
+        self._waiting.clear()
+        return record
+
     def _quiesce(self) -> int:
         self._replay_manifest = self.manifest()
         return self.queue.cancel_all(self.comm.generation)

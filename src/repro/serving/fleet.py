@@ -1,0 +1,698 @@
+"""Autoscaled serving fleet: router + admission + SLO-driven scale-out.
+
+The paper's elasticity story stops at one communicator: a group that can
+lose and regain members under the FMI join/regroup protocol.  This module
+is the layer the ROADMAP north-star ("heavy traffic from millions of
+users") needs on top — a :class:`FleetController` fronting **N**
+independent :class:`~repro.serving.engine.ContinuousBatchingEngine`
+replicas:
+
+* a :class:`Router` spreads arrivals (``'least-loaded'`` or
+  ``'session-affine'``) over the replicas currently accepting work;
+* an :class:`AdmissionController` gates each arrival on feasibility
+  (page-reservation fit) and queue depth, shedding with a modeled
+  ``retry_after_s`` when every replica's queue is full — load the fleet
+  *refuses* is priced, not silently dropped;
+* an :class:`Autoscaler` scales out/in on the fleet's **virtual clock**
+  (one tick = one lockstep engine step of ``tick_s`` modeled seconds),
+  driven by queue depth through :func:`modeled_p99_s` against a p99 SLO.
+
+Membership reuses the elastic generation protocol the runtime already
+models: the fleet keeps a :class:`~repro.runtime.membership.Membership`
+over **replica ids** (heartbeat per tick on the virtual clock) and an
+:class:`~repro.runtime.elastic.ElasticController` whose quiesce → regroup
+→ restore commit is exactly the replica join/leave path — scale-out is a
+``rejoin`` + ``rescale_up``, scale-in and replica failure are
+``mark_failed`` + ``heal``.  A replica killed mid-decode is *evacuated*
+(:meth:`~repro.serving.engine.ContinuousBatchingEngine.evacuate`): its
+KV-page manifest's token histories are re-routed to survivors as
+re-prefills, and because prefill ≡ incremental decode bitwise, each
+re-routed request finishes with **exactly** the token stream the unfailed
+run would have produced — re-routed, not dropped.
+
+Everything runs on virtual time (no wall clock, no global RNG — comm-lint
+FMI005 clean), so a :class:`~repro.serving.traffic.Trace` replay is
+bit-reproducible: same trace + same fleet config ⇒ identical per-request
+token streams, identical autoscaler decision log, identical shed set.
+
+Doctest — a two-replica fleet replays a seeded trace deterministically::
+
+    >>> from repro.serving.tp_lm import TPServeConfig
+    >>> from repro.serving.traffic import TrafficConfig, generate
+    >>> cfg = TPServeConfig(vocab_size=64, d_model=32, n_heads=4,
+    ...                     head_dim=8, d_ff=64, n_layers=2, max_len=32,
+    ...                     ff_chunks=4)
+    >>> trace = generate(TrafficConfig(
+    ...     seed=3, rate_rps=150.0, duration_s=0.02, vocab_size=64,
+    ...     prompt_mix=((2, 4, 1.0),), output_mix=((2, 3, 1.0),)))
+    >>> with FleetController(cfg, n_replicas=2, tick_s=1e-3) as fleet:
+    ...     report = fleet.run_trace(trace)
+    >>> sorted(report.tokens) == [r.rid for r in trace.requests]
+    True
+    >>> all(len(report.tokens[r.rid]) == r.max_new
+    ...     for r in trace.requests)
+    True
+    >>> report.shed
+    ()
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+
+from ..core.pricing import P_CHIP_S
+from ..runtime import ElasticController, Membership
+from .engine import ContinuousBatchingEngine
+from .tp_lm import TPServeConfig, init_params
+from .traffic import Trace, TrafficRequest
+
+#: Router policies :class:`Router` accepts.
+ROUTER_POLICIES = ("least-loaded", "session-affine")
+
+
+# ---------------------------------------------------------------------------
+# replicas and routing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Replica:
+    """One engine replica under fleet control.  ``draining`` replicas keep
+    serving what they already hold but accept no new work (the scale-in
+    path); ``booted_tick`` records when the replica joined (cold-start
+    accounting for post-mortems)."""
+
+    rid: int
+    engine: ContinuousBatchingEngine
+    draining: bool = False
+    booted_tick: int = 0
+
+    @property
+    def load(self) -> int:
+        return len(self.engine.active) + len(self.engine.waiting)
+
+    @property
+    def accepting(self) -> bool:
+        return not self.draining
+
+
+class Router:
+    """Deterministic request placement over the accepting replicas.
+
+    * ``'least-loaded'`` — the replica with the fewest live requests
+      (active + waiting), ties to the lowest replica id;
+    * ``'session-affine'`` — ``session mod n`` over the accepting replicas
+      in id order, so a session sticks to one replica while the accepting
+      set is stable (KV locality in a real deployment; here it exercises a
+      distinct, deterministic placement).
+    """
+
+    def __init__(self, policy: str = "least-loaded"):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"expected one of {ROUTER_POLICIES}")
+        self.policy = policy
+
+    def pick(self, replicas: list[_Replica], req: TrafficRequest) -> _Replica:
+        """The replica ``req`` lands on.  ``replicas`` must be the accepting
+        replicas in ascending id order (the caller guarantees order, which
+        is what makes placement replay-stable)."""
+        if not replicas:
+            raise RuntimeError("no accepting replicas to route to")
+        if self.policy == "session-affine":
+            return replicas[req.session % len(replicas)]
+        return min(replicas, key=lambda r: (r.load, r.rid))
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AdmissionDecision:
+    """Outcome of the admission gate for one arrival: ``reason`` is
+    ``'ok'``, ``'infeasible'`` (can never fit a replica's page pool) or
+    ``'overload'`` (every accepting queue at ``max_queue``; retry after
+    the modeled drain of the shallowest queue)."""
+
+    admit: bool
+    reason: str = "ok"
+    retry_after_s: float = 0.0
+
+
+@dataclass
+class AdmissionController:
+    """Queue-depth + page-reservation gate in front of the router.
+
+    A request is *infeasible* when its full reservation
+    (``prompt + max_new`` tokens) can never fit one replica — over the
+    model's ``max_len`` or over the page pool — and is rejected outright
+    (the capacity oracle in ``tests/test_fleet.py`` predicts these from
+    the trace alone).  It is *shed* when every accepting replica already
+    holds ``max_queue`` waiting requests; the shed carries a
+    ``retry_after_s`` from the modeled drain time of the shallowest queue
+    (``ceil(depth / max_slots) · service_ticks · tick_s``), the
+    serverless "429 + Retry-After" convention priced on the virtual
+    clock."""
+
+    max_queue: int = 8
+    service_ticks: int = 8
+
+    def decide(self, req: TrafficRequest, replicas: list[_Replica],
+               tick_s: float) -> AdmissionDecision:
+        if not replicas:
+            return AdmissionDecision(False, "overload",
+                                     self.service_ticks * tick_s)
+        eng = replicas[0].engine
+        total = req.total_tokens
+        if (total > eng.cfg.max_len
+                or eng.kv.pages_for(total) > eng.kv.n_pages):
+            return AdmissionDecision(False, "infeasible")
+        depths = [len(r.engine.waiting) for r in replicas]
+        if min(depths) >= self.max_queue:
+            waves = max(1, math.ceil(min(depths) / max(1, eng.max_slots)))
+            return AdmissionDecision(
+                False, "overload", waves * self.service_ticks * tick_s)
+        return AdmissionDecision(True)
+
+
+# ---------------------------------------------------------------------------
+# autoscaling
+# ---------------------------------------------------------------------------
+
+
+def modeled_p99_s(queued: int, n_replicas: int, max_slots: int,
+                  service_ticks: int, tick_s: float) -> float:
+    """Modeled p99 sojourn time for a newly-arriving request: the queue
+    drains in waves of ``n_replicas · max_slots`` requests, each wave
+    taking ``service_ticks`` ticks, plus the request's own service wave.
+
+    >>> modeled_p99_s(0, 1, 4, 8, 1e-3)   # empty queue: one service wave
+    0.008
+    >>> modeled_p99_s(9, 1, 4, 8, 1e-3)   # 9 queued / 4 slots = 3 waves
+    0.032
+    >>> modeled_p99_s(9, 3, 4, 8, 1e-3)   # 3x the replicas: 1 wave
+    0.016
+    """
+    capacity = max(1, n_replicas * max_slots)
+    waves = math.ceil(queued / capacity) if queued > 0 else 0
+    return (waves + 1) * service_ticks * tick_s
+
+
+@dataclass(frozen=True)
+class ScaleDecision:
+    """One non-hold autoscaler decision — the decision log is part of the
+    deterministic replay contract (same trace ⇒ identical log)."""
+
+    tick: int
+    action: str  # 'scale-out' | 'scale-in'
+    replicas: int  # fleet size AFTER the action
+    queue_depth: int
+    modeled_p99_ms: float
+    reason: str
+
+
+@dataclass
+class Autoscaler:
+    """SLO-driven scale-out/in on the virtual clock.
+
+    Scale **out** when the modeled p99 (:func:`modeled_p99_s` over the
+    current queue depth) exceeds ``slo_p99_ms`` and the fleet is below
+    ``max_replicas``; scale **in** when the fleet *minus one replica*
+    would still model p99 at or under half the SLO for
+    ``scale_in_ticks`` consecutive ticks (hysteresis, so a diurnal trough
+    does not flap the fleet).  ``cooldown_ticks`` spaces any two actions.
+    Pure function of the tick stream — no wall clock, no randomness."""
+
+    slo_p99_ms: float = 50.0
+    min_replicas: int = 1
+    max_replicas: int = 4
+    cooldown_ticks: int = 4
+    scale_in_ticks: int = 8
+    service_ticks: int = 8
+
+    _last_action_tick: int = field(default=-(10 ** 9), repr=False)
+    _calm_ticks: int = field(default=0, repr=False)
+
+    def decide(self, tick: int, queued: int, n_replicas: int,
+               max_slots: int, tick_s: float) -> ScaleDecision | None:
+        """The action for this tick, or ``None`` for hold."""
+        p99_ms = modeled_p99_s(queued, n_replicas, max_slots,
+                               self.service_ticks, tick_s) * 1e3
+        cooled = tick - self._last_action_tick >= self.cooldown_ticks
+        if p99_ms > self.slo_p99_ms:
+            self._calm_ticks = 0
+            if n_replicas < self.max_replicas and cooled:
+                self._last_action_tick = tick
+                return ScaleDecision(
+                    tick, "scale-out", n_replicas + 1, queued, p99_ms,
+                    f"modeled p99 {p99_ms:.3f}ms > SLO {self.slo_p99_ms}ms")
+            return None
+        smaller_ms = modeled_p99_s(queued, n_replicas - 1, max_slots,
+                                   self.service_ticks, tick_s) * 1e3
+        if n_replicas > self.min_replicas and smaller_ms <= 0.5 * self.slo_p99_ms:
+            self._calm_ticks += 1
+            if self._calm_ticks >= self.scale_in_ticks and cooled:
+                self._last_action_tick = tick
+                self._calm_ticks = 0
+                return ScaleDecision(
+                    tick, "scale-in", n_replicas - 1, queued, p99_ms,
+                    f"p99 at {n_replicas - 1} replicas {smaller_ms:.3f}ms "
+                    f"<= half SLO for {self.scale_in_ticks} ticks")
+        else:
+            self._calm_ticks = 0
+        return None
+
+
+# ---------------------------------------------------------------------------
+# the fleet controller
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FleetReport:
+    """Everything a trace replay produced, on the virtual clock.
+
+    ``tokens`` maps each trace request id to its full generated stream —
+    for a re-routed request that is *prefix (tokens generated before the
+    replica died) + continuation on the new replica*, bit-identical to
+    the unfailed run's stream."""
+
+    tokens: dict[int, tuple[int, ...]]
+    shed: tuple[tuple, ...]  # (rid, tick, reason, retry_after_s)
+    latency_s: dict[int, float]  # rid -> finish - arrival (virtual s)
+    decisions: tuple[ScaleDecision, ...]
+    history: tuple[dict, ...]  # elastic controller commit history
+    ticks: int
+    tick_s: float
+    replica_ticks: int  # sum over ticks of live replica count
+    tp: int
+    heals: int  # intra-replica (rank-level) heals observed
+
+    @property
+    def tokens_emitted(self) -> int:
+        return sum(len(t) for t in self.tokens.values())
+
+    @property
+    def virtual_s(self) -> float:
+        return self.ticks * self.tick_s
+
+    @property
+    def tok_per_vs(self) -> float:
+        """Throughput in tokens per *virtual* second."""
+        return self.tokens_emitted / self.virtual_s if self.ticks else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        n = len(self.tokens) + len(self.shed)
+        return len(self.shed) / n if n else 0.0
+
+    def _pctl(self, q: float) -> float:
+        lat = sorted(self.latency_s.values())
+        if not lat:
+            return 0.0
+        return lat[min(len(lat) - 1, int(math.ceil(q * len(lat))) - 1)]
+
+    @property
+    def p50_ms(self) -> float:
+        return self._pctl(0.50) * 1e3
+
+    @property
+    def p99_ms(self) -> float:
+        return self._pctl(0.99) * 1e3
+
+    @property
+    def usd_per_mtok(self) -> float:
+        """Replica-seconds actually burned (chips = replicas · tp), priced
+        at :data:`~repro.core.pricing.P_CHIP_S`, per million tokens — the
+        measured counterpart of :func:`repro.core.pricing.usd_per_mtok_at_slo`."""
+        toks = self.tokens_emitted
+        if toks == 0:
+            return float("inf")
+        chip_s = self.replica_ticks * self.tp * self.tick_s
+        return chip_s * P_CHIP_S / toks * 1e6
+
+    def summary(self) -> dict:
+        return {
+            "requests": len(self.tokens), "shed": len(self.shed),
+            "tokens": self.tokens_emitted, "ticks": self.ticks,
+            "tok_per_vs": round(self.tok_per_vs, 3),
+            "p50_ms": round(self.p50_ms, 6),
+            "p99_ms": round(self.p99_ms, 6),
+            "shed_rate": round(self.shed_rate, 6),
+            "usd_per_mtok": round(self.usd_per_mtok, 6),
+            "heals": self.heals, "scale_events": len(self.decisions),
+        }
+
+
+class FleetController:
+    """N engine replicas behind one router/admission/autoscaler front.
+
+    The fleet advances in **ticks**: one tick steps every live replica
+    once (lockstep, in replica-id order) and costs ``tick_s`` modeled
+    seconds — by default the engine's own modeled decode step
+    (``engine.serve_plan().decode.step_s``), so virtual time is the
+    selector's time.  Arrivals, latencies, heartbeats, the SLO and the
+    autoscaler all live on this clock; nothing reads a wall clock.
+
+    Replica membership *is* the runtime's elastic protocol: a
+    :class:`~repro.runtime.membership.Membership` over replica ids and an
+    :class:`~repro.runtime.elastic.ElasticController` (``'ring'``
+    strategy: every surviving replica stays active — replica counts are
+    not power-of-two-constrained).  Its quiesce hook evacuates dead
+    replicas' engines and stages their manifests; its restore hook
+    re-routes every staged request to a survivor.  Scale-out boots a
+    fresh engine on shared weights and commits it via ``rejoin`` +
+    ``rescale_up``; scale-in drains the highest-id replica, then retires
+    it through the same heal path (history evidence ``'scale-in'``).
+
+    All replicas share one weight set (``init_params(cfg, seed)`` built
+    once), which is what makes per-request token streams independent of
+    the replica count: the engine's decode is bit-exact regardless of
+    batch composition, so *where* a request lands never changes *what* it
+    generates.
+    """
+
+    def __init__(self, cfg: TPServeConfig | None = None, *,
+                 n_replicas: int = 1, tp: int = 1, max_slots: int = 4,
+                 kv_pages: int = 64, page_size: int = 8, seed: int = 0,
+                 logits_mode: str = "gather", kv_dtype: str = "f32",
+                 attn_backend: str = "gather", max_new_default: int = 16,
+                 router: str | Router = "least-loaded",
+                 admission: AdmissionController | None = None,
+                 max_queue: int = 8,
+                 autoscaler: Autoscaler | None = None,
+                 max_replicas: int | None = None,
+                 tick_s: float | None = None,
+                 heartbeat_ticks: int = 64):
+        if n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        self.cfg = cfg if cfg is not None else TPServeConfig()
+        self.tp = int(tp)
+        self._engine_kw = dict(
+            world=tp, max_slots=max_slots, kv_pages=kv_pages,
+            page_size=page_size, seed=seed, logits_mode=logits_mode,
+            kv_dtype=kv_dtype, attn_backend=attn_backend,
+            max_new_default=max_new_default,
+        )
+        self.params = init_params(self.cfg, seed)  # one weight set, shared
+        self.router = router if isinstance(router, Router) else Router(router)
+        self.admission = admission if admission is not None else (
+            AdmissionController(max_queue=max_queue))
+        self.autoscaler = autoscaler
+        if max_replicas is None:
+            max_replicas = (autoscaler.max_replicas if autoscaler is not None
+                            else n_replicas)
+        self.max_replicas = max(int(max_replicas), n_replicas)
+
+        self.tick = 0
+        self._replicas: dict[int, _Replica] = {}
+        self._boot_replica(0)
+        if tick_s is None:  # the virtual tick IS the modeled decode step
+            tick_s = float(self._replicas[0].engine.serve_plan().decode.step_s)
+        self.tick_s = float(tick_s)
+        for rid in range(1, n_replicas):
+            self._boot_replica(rid)
+
+        self.membership = Membership(
+            expected=self.max_replicas,
+            heartbeat_timeout=heartbeat_ticks * self.tick_s,
+            clock=lambda: self.tick * self.tick_s,
+        )
+        self.membership.reform(range(n_replicas))
+        self.controller = ElasticController(
+            membership=self.membership, rebuild=self._rebuild,
+            restore=self._restore, quiesce=self._quiesce, strategy="ring",
+        )
+
+        # replay state: trace rid -> record / placement / re-route prefix
+        self._records: dict[int, dict] = {}
+        self._inflight: dict[tuple[int, int], int] = {}  # (rid, sid) -> fid
+        self._prefix: dict[int, tuple[int, ...]] = {}
+        self._orphans: list[tuple] = []  # staged by quiesce, for restore
+        self.shed: list[tuple] = []  # (fid, tick, reason, retry_after_s)
+        self.decisions: list[ScaleDecision] = []
+        self.replica_ticks = 0
+        self.heals = 0
+        self._closed = False
+
+    # -- lifecycle ----------------------------------------------------------
+    def _boot_replica(self, rid: int) -> _Replica:
+        eng = ContinuousBatchingEngine(self.cfg, params=self.params,
+                                       **self._engine_kw)
+        rep = _Replica(rid=rid, engine=eng, booted_tick=self.tick)
+        self._replicas[rid] = rep
+        return rep
+
+    def close(self) -> None:
+        """Close every replica engine (idempotent).  Under the sanitizer
+        each close is a leak checkpoint, so a fleet abandoned mid-trace
+        reports its stranded requests per replica."""
+        if self._closed:
+            return
+        self._closed = True
+        for rid in sorted(self._replicas):
+            self._replicas[rid].engine.close()
+        self._replicas.clear()
+
+    def __enter__(self) -> "FleetController":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- views --------------------------------------------------------------
+    @property
+    def n_replicas(self) -> int:
+        return len(self._replicas)
+
+    @property
+    def now_s(self) -> float:
+        return self.tick * self.tick_s
+
+    def _live(self) -> list[_Replica]:
+        group = sorted(self.membership.group())
+        return [self._replicas[r] for r in group if r in self._replicas]
+
+    def _accepting(self) -> list[_Replica]:
+        return [r for r in self._live() if r.accepting]
+
+    @property
+    def done(self) -> bool:
+        return all(r.engine.done for r in self._live())
+
+    def queue_depth(self) -> int:
+        return sum(len(r.engine.waiting) for r in self._accepting())
+
+    # -- request intake -----------------------------------------------------
+    def submit(self, req: TrafficRequest) -> bool:
+        """Route one trace request through admission.  Returns True when
+        admitted; a shed/infeasible request is recorded (with its modeled
+        ``retry_after_s``) and not retried — the replay harness treats the
+        shed set as an output to verify, not a failure."""
+        accepting = self._accepting()
+        verdict = self.admission.decide(req, accepting, self.tick_s)
+        if not verdict.admit:
+            self.shed.append((req.rid, self.tick, verdict.reason,
+                              verdict.retry_after_s))
+            return False
+        rep = self.router.pick(accepting, req)
+        sid = rep.engine.submit(req.prompt, req.max_new)
+        self._inflight[(rep.rid, sid)] = req.rid
+        self._records[req.rid] = {"arrival_s": req.arrival_s,
+                                  "session": req.session}
+        return True
+
+    # -- elastic protocol hooks (replica membership) ------------------------
+    def _rebuild(self, size: int) -> None:
+        # replicas are independent engines: a fleet regroup rebuilds no
+        # communicator, membership.reform() already fixed the group
+        return None
+
+    def _quiesce(self) -> int:
+        """Evacuate every replica the pending regroup drops (in the old
+        group but not among the survivors): stage its manifest's token
+        histories and its waiting queue for re-routing, then close the
+        engine (leak-free: evacuation freed the page reservations)."""
+        group = sorted(self.membership.group())
+        survivors = set(self.membership.survivors())
+        staged = 0
+        for rid in group:
+            if rid in survivors or rid not in self._replicas:
+                continue
+            rep = self._replicas.pop(rid)
+            record = rep.engine.evacuate()
+            man = record["manifest"]
+            for sid in man.live:
+                entry = man.seqs[sid]
+                fid = self._inflight.pop((rid, sid))
+                history = tuple(int(t) for t in entry["tokens"])
+                generated = history[entry["n_prompt"]:]
+                prefix = self._prefix.get(fid, ()) + generated
+                remaining = entry["max_new"] - len(generated)
+                sess = self._records[fid]["session"]
+                self._orphans.append((fid, history, remaining, prefix, sess))
+                staged += 1
+            for sid, prompt, max_new in record["waiting"]:
+                fid = self._inflight.pop((rid, sid))
+                self._orphans.append(
+                    (fid, prompt, max_new,
+                     self._prefix.get(fid, ()),
+                     self._records[fid]["session"]))
+                staged += 1
+            rep.engine.close()
+        return staged
+
+    def _restore(self) -> int:
+        """Re-route every staged request to a surviving replica.  Bypasses
+        admission — in-flight work is re-routed, not dropped (nor
+        re-shed).  The re-prefill of the full token history re-derives the
+        interrupted token bit-exactly (prefill ≡ incremental decode)."""
+        orphans, self._orphans = self._orphans, []
+        accepting = self._accepting() or self._live()
+        for fid, history, remaining, prefix, sess in orphans:
+            req = TrafficRequest(rid=fid, arrival_s=0.0, session=sess,
+                                 prompt=history, max_new=remaining)
+            rep = self.router.pick(accepting, req)
+            sid = rep.engine.submit(history, remaining)
+            self._inflight[(rep.rid, sid)] = fid
+            self._prefix[fid] = tuple(prefix)
+        return len(orphans)
+
+    # -- membership events --------------------------------------------------
+    def scale_out(self) -> int | None:
+        """Boot one replica (lowest free id) on the shared weights and fold
+        it in through the elastic protocol (``rejoin`` + ``rescale_up``).
+        Returns the new replica id, or None at ``max_replicas``."""
+        free = [r for r in range(self.max_replicas)
+                if r not in self._replicas]
+        if not free:
+            return None
+        rid = free[0]
+        self._boot_replica(rid)
+        self.membership.rejoin(rid)
+        self.controller.rescale_up()
+        self.controller.history[-1]["evidence"] = "scale-out"
+        return rid
+
+    def _drain_one(self) -> int | None:
+        """Mark the highest-id non-draining replica draining (scale-in
+        step 1); it retires through the heal path once empty."""
+        candidates = [r for r in self._live() if r.accepting]
+        if len(candidates) <= 1:
+            return None
+        rep = candidates[-1]
+        rep.draining = True
+        return rep.rid
+
+    def _retire_drained(self) -> None:
+        for rep in self._live():
+            if rep.draining and rep.engine.done:
+                self.membership.mark_failed(rep.rid)
+                self.controller.heal()
+                self.controller.history[-1]["evidence"] = "scale-in"
+
+    def kill_replica(self, rid: int) -> None:
+        """Fail replica ``rid`` now (fleet-level fault injection).  The
+        heal evacuates its engine and re-routes every in-flight request to
+        the survivors — the trace finishes with bit-identical streams."""
+        if rid not in self._replicas:
+            raise ValueError(f"no live replica {rid}")
+        self.membership.mark_failed(rid)
+        self.controller.heal()
+        self.controller.history[-1]["evidence"] = "replica-failure"
+
+    def kill_rank(self, rid: int, rank: int, after_rounds: int = 3) -> None:
+        """Kill one TP rank *inside* replica ``rid`` — the replica heals
+        itself via the engine's own manifest replay (intra-replica
+        elasticity), invisible to the router except as a counted heal."""
+        self._replicas[rid].engine.transport.kill(rank,
+                                                  after_rounds=after_rounds)
+
+    # -- the tick loop ------------------------------------------------------
+    def _collect_finished(self, rep: _Replica) -> None:
+        eng = rep.engine
+        for sid in sorted(eng.finished):
+            key = (rep.rid, sid)
+            if key not in self._inflight:
+                continue
+            fid = self._inflight.pop(key)
+            toks = self._prefix.pop(fid, ()) + tuple(
+                int(t) for t in eng.finished.pop(sid))
+            rec = self._records[fid]
+            rec["tokens"] = toks
+            rec["latency_s"] = (self.tick + 1) * self.tick_s - rec["arrival_s"]
+
+    def _tick_once(self) -> None:
+        """One fleet tick: step every live replica (healing rank failures
+        in place), collect finishes, retire drained replicas, autoscale,
+        heartbeat the group, advance the clock."""
+        live = self._live()
+        self.replica_ticks += len(live)
+        for rep in live:
+            if not rep.engine.done:
+                _, healed = rep.engine.step_or_heal()
+                self.heals += int(healed)
+            self._collect_finished(rep)
+        self._retire_drained()
+        if self.autoscaler is not None:
+            decision = self.autoscaler.decide(
+                self.tick, self.queue_depth(), len(self._live()),
+                self._replicas[min(self._replicas)].engine.max_slots,
+                self.tick_s)
+            if decision is not None:
+                applied = (self.scale_out() is not None
+                           if decision.action == "scale-out"
+                           else self._drain_one() is not None)
+                if applied:
+                    self.decisions.append(decision)
+        for r in sorted(self.membership.group()):
+            if r in self._replicas:
+                self.membership.heartbeat(r)
+        self.tick += 1
+
+    def run_trace(self, trace: Trace, *,
+                  kill_replica_at: tuple[int, int] | None = None,
+                  kill_rank_at: tuple[int, int, int] | None = None,
+                  max_ticks: int = 200_000) -> FleetReport:
+        """Replay ``trace`` to completion on the virtual clock.
+
+        Arrivals with ``arrival_s <= now`` are delivered (in trace order)
+        at the top of each tick; optional fault injections fire at their
+        tick — ``kill_replica_at=(rid, tick)`` fails a whole replica,
+        ``kill_rank_at=(rid, rank, tick)`` fails one TP rank inside a
+        replica.  Returns the :class:`FleetReport`; raises if the trace
+        does not finish within ``max_ticks`` (a stuck fleet is a bug, not
+        a timeout)."""
+        pending = deque(trace.requests)
+        while pending or not self.done:
+            while pending and pending[0].arrival_s <= self.now_s:
+                self.submit(pending.popleft())
+            if kill_replica_at is not None and kill_replica_at[1] == self.tick:
+                self.kill_replica(kill_replica_at[0])
+            if kill_rank_at is not None and kill_rank_at[2] == self.tick:
+                self.kill_rank(kill_rank_at[0], kill_rank_at[1])
+            self._tick_once()
+            if self.tick >= max_ticks:
+                raise RuntimeError(
+                    f"trace not drained after {max_ticks} ticks "
+                    f"({len(pending)} undelivered, depth {self.queue_depth()})")
+        return self.report()
+
+    def report(self) -> FleetReport:
+        finished = {fid: rec for fid, rec in self._records.items()
+                    if "tokens" in rec}
+        return FleetReport(
+            tokens={fid: rec["tokens"] for fid, rec in sorted(finished.items())},
+            shed=tuple(self.shed),
+            latency_s={fid: rec["latency_s"]
+                       for fid, rec in sorted(finished.items())},
+            decisions=tuple(self.decisions),
+            history=tuple(self.controller.history),
+            ticks=self.tick, tick_s=self.tick_s,
+            replica_ticks=self.replica_ticks, tp=self.tp,
+            heals=self.heals,
+        )

@@ -1,0 +1,318 @@
+"""Fleet controller: deterministic trace replay, routing invariance,
+admission oracle, and replica-level elasticity.
+
+Every test replays a committed golden fixture from
+``tests/fixtures/traffic/`` on the fleet's virtual clock, so the whole
+suite is bit-reproducible:
+
+* **replay determinism** — the same trace through the same fleet config
+  produces identical per-request token streams, identical autoscaler
+  decision log, identical shed set;
+* **placement invariance** — token streams are identical at 1, 2, and 4
+  replicas and under either router policy: replicas share one weight
+  set and the engine decode is bit-exact regardless of batch
+  composition, so *where* a request lands never changes *what* it says;
+* **capacity oracle** — the requests the admission gate sheds are
+  exactly the ones a pure-python replica model (slots + page budget +
+  queue depth, no engine) predicts, finish ticks included;
+* **kill-replica mid-trace** — a replica failure evacuates its engine
+  via the KV-page manifest and re-routes every in-flight request to the
+  survivors; the final streams are bit-identical to the unfailed run
+  (re-routed, not dropped), and scale-out/in rides the same elastic
+  membership protocol with evidence-tagged history.
+"""
+
+import math
+import pathlib
+from collections import deque
+
+import pytest
+
+from repro.serving.fleet import (
+    AdmissionController,
+    Autoscaler,
+    FleetController,
+    Router,
+    modeled_p99_s,
+)
+from repro.serving.tp_lm import TPServeConfig
+from repro.serving.traffic import Trace, TrafficConfig, TrafficRequest
+
+FIXDIR = pathlib.Path(__file__).parent / "fixtures" / "traffic"
+
+CFG = TPServeConfig(vocab_size=64, d_model=32, n_heads=4, head_dim=8,
+                    d_ff=64, n_layers=2, max_len=32, ff_chunks=4)
+TICK_S = 1e-3  # virtual seconds per tick, pinned for replay stability
+
+
+def _steady() -> Trace:
+    return Trace.load(str(FIXDIR / "steady_poisson.json"))
+
+
+def _bursty() -> Trace:
+    return Trace.load(str(FIXDIR / "bursty_diurnal.json"))
+
+
+def _fleet(**kw):
+    kw.setdefault("n_replicas", 2)
+    kw.setdefault("tick_s", TICK_S)
+    kw.setdefault("max_queue", 64)
+    return FleetController(CFG, **kw)
+
+
+def _autoscaler(**kw):
+    kw.setdefault("slo_p99_ms", 20.0)
+    kw.setdefault("min_replicas", 1)
+    kw.setdefault("max_replicas", 4)
+    kw.setdefault("cooldown_ticks", 4)
+    kw.setdefault("scale_in_ticks", 8)
+    return Autoscaler(**kw)
+
+
+# ---------------------------------------------------------------------------
+# replay determinism
+# ---------------------------------------------------------------------------
+
+
+def test_same_trace_same_config_identical_replay():
+    trace = _bursty()
+    reports = []
+    for _ in range(2):
+        with _fleet(n_replicas=1, max_queue=8,
+                    autoscaler=_autoscaler()) as fleet:
+            reports.append(fleet.run_trace(trace))
+    a, b = reports
+    assert a.tokens == b.tokens
+    assert a.latency_s == b.latency_s
+    assert a.decisions == b.decisions  # the autoscaler decision log
+    assert a.shed == b.shed
+    assert a.ticks == b.ticks
+    assert [h.get("evidence") for h in a.history] == \
+           [h.get("evidence") for h in b.history]
+
+
+def test_token_streams_identical_across_replica_counts():
+    trace = _steady()
+    runs = {}
+    for n in (1, 2, 4):
+        with _fleet(n_replicas=n) as fleet:
+            runs[n] = fleet.run_trace(trace)
+    assert sorted(runs[1].tokens) == [r.rid for r in trace.requests]
+    assert runs[1].tokens == runs[2].tokens == runs[4].tokens
+    assert not runs[4].shed
+
+
+def test_token_streams_identical_across_router_policies():
+    trace = _steady()
+    runs = {}
+    for policy in ("least-loaded", "session-affine"):
+        with _fleet(router=policy) as fleet:
+            runs[policy] = fleet.run_trace(trace)
+    assert runs["least-loaded"].tokens == runs["session-affine"].tokens
+
+
+def test_report_metrics_consistent():
+    with _fleet() as fleet:
+        rep = fleet.run_trace(_steady())
+    assert rep.tokens_emitted == sum(len(t) for t in rep.tokens.values())
+    assert 0.0 < rep.p50_ms <= rep.p99_ms
+    assert rep.tok_per_vs > 0 and rep.usd_per_mtok > 0
+    assert rep.replica_ticks >= rep.ticks  # >= 1 live replica per tick
+    assert rep.virtual_s == rep.ticks * TICK_S
+
+
+# ---------------------------------------------------------------------------
+# capacity oracle: shed set and finish ticks predicted without an engine
+# ---------------------------------------------------------------------------
+
+
+def _oracle(trace, *, n_replicas, max_slots, kv_pages, page_size,
+            max_queue, max_len=CFG.max_len, tick_s=TICK_S):
+    """Pure-python replica model mirroring the engine's admission cycle:
+    decode decrements pre-step actives, FIFO admission while a slot and
+    the full page reservation are free (head-of-line blocking on pages),
+    eviction at step end.  Returns (shed rids, {rid: finish_tick})."""
+    pages_for = lambda total: math.ceil(total / page_size)
+
+    class Rep:
+        def __init__(self):
+            self.active = []  # [rid, remaining, pages]
+            self.waiting = deque()  # (rid, total, max_new)
+            self.free = kv_pages
+
+        @property
+        def load(self):
+            return len(self.active) + len(self.waiting)
+
+    reps = [Rep() for _ in range(n_replicas)]
+    shed, finish, pending = [], {}, deque(trace.requests)
+    tick = 0
+    while pending or any(r.load for r in reps):
+        while pending and pending[0].arrival_s <= tick * tick_s:
+            req = pending.popleft()
+            total = req.total_tokens
+            if total > max_len or pages_for(total) > kv_pages:
+                shed.append(req.rid)
+                continue
+            if min(len(r.waiting) for r in reps) >= max_queue:
+                shed.append(req.rid)
+                continue
+            rep = min(enumerate(reps), key=lambda p: (p[1].load, p[0]))[1]
+            rep.waiting.append((req.rid, total, req.max_new))
+        for rep in reps:
+            for entry in rep.active:  # decode: pre-step actives advance
+                entry[1] -= 1
+            while len(rep.active) < max_slots and rep.waiting:
+                rid, total, max_new = rep.waiting[0]
+                need = pages_for(total)
+                if need > rep.free:
+                    break  # FIFO head-of-line blocks on its reservation
+                rep.waiting.popleft()
+                rep.free -= need
+                rep.active.append([rid, max_new - 1, need])  # prefill emits 1
+            for entry in list(rep.active):
+                if entry[1] <= 0:
+                    rep.active.remove(entry)
+                    rep.free += entry[2]
+                    finish[entry[0]] = tick
+        tick += 1
+        assert tick < 10_000, "oracle did not drain"
+    return shed, finish
+
+
+@pytest.mark.parametrize("n_replicas,max_queue", [(1, 2), (2, 1)])
+def test_admission_shed_matches_capacity_oracle(n_replicas, max_queue):
+    trace = _bursty()
+    slots, pages, page_size = 2, 16, 4
+    with _fleet(n_replicas=n_replicas, max_slots=slots, kv_pages=pages,
+                page_size=page_size, max_queue=max_queue) as fleet:
+        rep = fleet.run_trace(trace)
+    want_shed, want_finish = _oracle(
+        trace, n_replicas=n_replicas, max_slots=slots, kv_pages=pages,
+        page_size=page_size, max_queue=max_queue)
+    assert want_shed, "fixture must overload this shape"
+    assert [fid for fid, *_ in rep.shed] == want_shed
+    assert all(reason == "overload" and retry > 0
+               for _, _, reason, retry in rep.shed)
+    # finish ticks match too: latency = (finish_tick + 1) * tick - arrival
+    arrivals = {r.rid: r.arrival_s for r in trace.requests}
+    got_finish = {
+        fid: round((lat + arrivals[fid]) / TICK_S) - 1
+        for fid, lat in rep.latency_s.items()
+    }
+    assert got_finish == want_finish
+
+
+def test_infeasible_request_shed_with_reason():
+    big = TrafficRequest(rid=0, arrival_s=0.0, session=0,
+                         prompt=tuple(range(30)), max_new=10)  # > max_len
+    ok = TrafficRequest(rid=1, arrival_s=0.0, session=0,
+                        prompt=(1, 2), max_new=2)
+    trace = Trace(config=TrafficConfig(vocab_size=64),
+                  requests=(big, ok))
+    with _fleet(n_replicas=1) as fleet:
+        rep = fleet.run_trace(trace)
+    assert [s[0] for s in rep.shed] == [0]
+    assert rep.shed[0][2] == "infeasible"
+    assert sorted(rep.tokens) == [1]
+
+
+# ---------------------------------------------------------------------------
+# elasticity: kill-replica, kill-rank, scale-out/in
+# ---------------------------------------------------------------------------
+
+
+def test_kill_replica_mid_trace_rerouted_bitexact():
+    trace = _steady()
+    with _fleet() as fleet:
+        unfailed = fleet.run_trace(trace)
+    with _fleet() as fleet:
+        failed = fleet.run_trace(trace, kill_replica_at=(1, 6))
+    # re-routed, not dropped: every request finishes with the exact
+    # stream of the unfailed run (prefix + manifest-replay continuation)
+    assert failed.tokens == unfailed.tokens
+    assert not failed.shed
+    assert [h.get("evidence") for h in failed.history] == ["replica-failure"]
+    assert failed.history[0]["step"] >= 1  # in-flight work was re-routed
+
+
+def test_kill_rank_inside_replica_heals_bitexact():
+    trace = _steady()
+    with _fleet() as fleet:
+        unfailed = fleet.run_trace(trace)
+    with _fleet(tp=2) as fleet:
+        healed = fleet.run_trace(trace, kill_rank_at=(0, 1, 5))
+    assert healed.tokens == unfailed.tokens
+    assert healed.heals == 1  # intra-replica: invisible to the router
+    assert not healed.history  # no fleet-level membership commit
+
+
+def test_autoscaler_scales_out_under_burst_and_back_in():
+    trace = _bursty()
+    with _fleet(n_replicas=1, max_queue=8,
+                autoscaler=_autoscaler()) as fleet:
+        rep = fleet.run_trace(trace)
+    actions = [d.action for d in rep.decisions]
+    assert "scale-out" in actions and "scale-in" in actions
+    assert [h["evidence"] for h in rep.history] == actions
+    assert sorted(rep.tokens) == [r.rid for r in trace.requests]
+    for d in rep.decisions:  # the log carries the modeled signal
+        assert d.modeled_p99_ms > 0 and d.replicas >= 1 and d.reason
+
+
+def test_autoscaled_streams_match_fixed_fleet():
+    trace = _bursty()
+    with _fleet(n_replicas=1, max_queue=64) as fleet:
+        fixed = fleet.run_trace(trace)
+    with _fleet(n_replicas=1, max_queue=64,
+                autoscaler=_autoscaler()) as fleet:
+        scaled = fleet.run_trace(trace)
+    assert scaled.tokens == fixed.tokens  # scaling never changes content
+    assert scaled.decisions  # and it did actually scale
+
+
+def test_scale_out_uses_elastic_protocol():
+    with _fleet(n_replicas=1, max_replicas=3) as fleet:
+        assert fleet.scale_out() == 1
+        assert fleet.scale_out() == 2
+        assert fleet.scale_out() is None  # at max_replicas
+        assert sorted(fleet.membership.group()) == [0, 1, 2]
+        assert fleet.membership.epoch == 3  # initial reform + 2 commits
+        assert [h["evidence"] for h in fleet.controller.history] == \
+               ["scale-out", "scale-out"]
+
+
+# ---------------------------------------------------------------------------
+# components
+# ---------------------------------------------------------------------------
+
+
+def test_modeled_p99_monotone():
+    assert modeled_p99_s(0, 1, 4, 8, TICK_S) == 8 * TICK_S
+    assert modeled_p99_s(16, 1, 4, 8, TICK_S) > \
+           modeled_p99_s(16, 4, 4, 8, TICK_S)
+    assert modeled_p99_s(32, 2, 4, 8, TICK_S) > \
+           modeled_p99_s(8, 2, 4, 8, TICK_S)
+
+
+def test_router_rejects_unknown_policy():
+    with pytest.raises(ValueError, match="policy"):
+        Router("round-robin")
+
+
+def test_admission_retry_after_scales_with_depth():
+    adm = AdmissionController(max_queue=0, service_ticks=8)
+    req = TrafficRequest(rid=0, arrival_s=0.0, session=0,
+                         prompt=(1, 2), max_new=2)
+    with _fleet(n_replicas=1) as fleet:
+        reps = fleet._accepting()
+        v = adm.decide(req, reps, TICK_S)
+        assert not v.admit and v.reason == "overload"
+        assert v.retry_after_s >= 8 * TICK_S
+
+
+def test_fleet_validates_args():
+    with pytest.raises(ValueError, match="n_replicas"):
+        FleetController(CFG, n_replicas=0)
+    with pytest.raises(ValueError, match="policy"):
+        FleetController(CFG, router="bogus").close()

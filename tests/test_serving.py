@@ -454,3 +454,26 @@ def test_serve_plan_kv_dtype_shrinks_emission_payload():
     assert f32.kv_bytes_per_token == 2 * 8 * 1024 * 4 / 8
     table = explain_serve_plan(kv_dtype="int8", **kw)
     assert "kv: dtype int8" in table
+
+
+def test_single_replica_fleet_matches_bare_engine_bitwise():
+    """FleetController(n=1) is provably a no-op wrapper: replaying a trace
+    through a one-replica fleet emits bitwise the tokens the bare engine
+    produces for the same requests — the router/admission/autoscaler layer
+    adds no nondeterminism to the decode path."""
+    from repro.serving.fleet import FleetController
+    from repro.serving.traffic import Trace
+
+    trace = Trace.load("tests/fixtures/traffic/steady_poisson.json")
+    kw = dict(max_slots=4, kv_pages=64, page_size=8, seed=0)
+    with FleetController(CFG, n_replicas=1, tick_s=1e-3, **kw) as fleet:
+        report = fleet.run_trace(trace)
+    bare = {}
+    with ContinuousBatchingEngine(CFG, world=1, **kw) as eng:
+        sids = {eng.submit(r.prompt, max_new=r.max_new): r.rid
+                for r in trace.requests}
+        eng.run()
+        for sid, rid in sids.items():
+            bare[rid] = tuple(int(t) for t in eng.finished[sid])
+    assert report.tokens == bare
+    assert not report.shed and not report.history

@@ -1,0 +1,196 @@
+"""Traffic generator: determinism, golden fixtures, statistical sanity.
+
+The fleet harness (``tests/test_fleet.py``) is only as reproducible as
+its traces, so this suite pins the generator three ways:
+
+* **determinism** — the same :class:`TrafficConfig` yields the identical
+  trace, and regenerating the committed golden fixtures under
+  ``tests/fixtures/traffic/`` reproduces them byte-for-byte (a PCG64
+  stream-stability canary: if numpy's bit generator ever changed, these
+  fail before any fleet test misbehaves);
+* **statistics** — fixed-seed golden stats (no wall clock, no global
+  RNG) plus tolerance checks that the Poisson rate and the diurnal
+  burstiness actually landed where the config asked;
+* **format** — the JSON fixture round-trips exactly, rejects unknown
+  versions, and :meth:`Trace.clipped` keeps every request inside a
+  smaller engine's reservation budget.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.serving.traffic import (
+    TRACE_VERSION,
+    Trace,
+    TrafficConfig,
+    TrafficRequest,
+    generate,
+)
+
+FIXDIR = pathlib.Path(__file__).parent / "fixtures" / "traffic"
+
+# the exact configs the committed golden fixtures were generated from
+STEADY_CFG = TrafficConfig(
+    seed=0, pattern="poisson", rate_rps=400.0, duration_s=0.04,
+    vocab_size=64, prompt_mix=((2, 6, 0.75), (8, 14, 0.25)),
+    output_mix=((2, 6, 0.8), (8, 12, 0.2)))
+BURSTY_CFG = TrafficConfig(
+    seed=1, pattern="diurnal", rate_rps=300.0, burst=6.0, period_s=0.03,
+    duration_s=0.06, vocab_size=64,
+    prompt_mix=((2, 6, 1.0),), output_mix=((2, 6, 1.0),))
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [STEADY_CFG, BURSTY_CFG],
+                         ids=["poisson", "diurnal"])
+def test_same_seed_identical_trace(cfg):
+    assert generate(cfg) == generate(cfg)
+
+
+def test_different_seed_different_trace():
+    a = generate(STEADY_CFG)
+    b = generate(TrafficConfig(**{**STEADY_CFG.__dict__, "seed": 99}))
+    assert a != b
+
+
+@pytest.mark.parametrize("cfg,name", [
+    (STEADY_CFG, "steady_poisson.json"),
+    (BURSTY_CFG, "bursty_diurnal.json"),
+], ids=["poisson", "diurnal"])
+def test_regenerate_matches_committed_fixture(cfg, name):
+    committed = Trace.load(str(FIXDIR / name))
+    assert generate(cfg) == committed
+    assert committed.config == cfg
+
+
+def test_golden_stats_steady():
+    s = Trace.load(str(FIXDIR / "steady_poisson.json")).stats()
+    assert s == {
+        "n_requests": 10, "duration_s": 0.04, "mean_rate_rps": 250.0,
+        "peak_rate_rps": 1000.0, "mean_prompt_len": 4.9,
+        "max_prompt_len": 8, "mean_max_new": 5.0, "total_tokens": 99,
+        "sessions": 6, "mean_gap_s": 0.00375705,
+    }
+
+
+def test_golden_stats_bursty():
+    s = Trace.load(str(FIXDIR / "bursty_diurnal.json")).stats()
+    assert s == {
+        "n_requests": 59, "duration_s": 0.06,
+        "mean_rate_rps": 983.333333, "peak_rate_rps": 2000.0,
+        "mean_prompt_len": 4.084746, "max_prompt_len": 6,
+        "mean_max_new": 3.830508, "total_tokens": 467,
+        "sessions": 8, "mean_gap_s": 0.000972615,
+    }
+
+
+# ---------------------------------------------------------------------------
+# statistical sanity
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_rate_and_mixture_land_near_config():
+    cfg = TrafficConfig(seed=5, rate_rps=500.0, duration_s=1.0,
+                        vocab_size=64)
+    t = generate(cfg)
+    s = t.stats()
+    # ~500 arrivals: the empirical rate sits within 20% of the config
+    assert 0.8 * cfg.rate_rps < s["mean_rate_rps"] < 1.2 * cfg.rate_rps
+    lows = {lo for lo, _, _ in cfg.prompt_mix}
+    highs = {hi for _, hi, _ in cfg.prompt_mix}
+    assert all(min(lows) <= len(r.prompt) <= max(highs) for r in t.requests)
+    assert all(0 <= tok < cfg.vocab_size
+               for r in t.requests for tok in r.prompt)
+    assert all(0 <= r.session < cfg.sessions for r in t.requests)
+
+
+def test_diurnal_is_burstier_than_its_trough():
+    cfg = TrafficConfig(seed=6, pattern="diurnal", rate_rps=100.0,
+                        burst=8.0, period_s=0.25, duration_s=1.0,
+                        vocab_size=64)
+    s = generate(cfg).stats()
+    # the sinusoid averages (1 + burst)/2 x trough; the 10-bin peak must
+    # clearly exceed the mean (burstiness exists) without topping the
+    # thinning ceiling by more than sampling noise
+    assert s["peak_rate_rps"] > 1.5 * s["mean_rate_rps"]
+    assert s["peak_rate_rps"] < 1.5 * cfg.burst * cfg.rate_rps
+
+
+def test_arrivals_sorted_and_rids_sequential():
+    t = generate(BURSTY_CFG)
+    arr = [r.arrival_s for r in t.requests]
+    assert arr == sorted(arr)
+    assert [r.rid for r in t.requests] == list(range(len(t.requests)))
+    assert all(0.0 < a <= BURSTY_CFG.duration_s for a in arr)
+
+
+# ---------------------------------------------------------------------------
+# fixture format
+# ---------------------------------------------------------------------------
+
+
+def test_json_round_trip_exact():
+    t = generate(STEADY_CFG)
+    assert Trace.from_json(t.to_json()) == t
+
+
+def test_save_load_round_trip(tmp_path):
+    t = generate(BURSTY_CFG)
+    p = tmp_path / "trace.json"
+    t.save(str(p))
+    assert Trace.load(str(p)) == t
+    # the on-disk form is plain versioned JSON (inspectable fixtures)
+    obj = json.loads(p.read_text())
+    assert obj["version"] == TRACE_VERSION
+    assert len(obj["requests"]) == len(t.requests)
+
+
+def test_from_json_rejects_unknown_version():
+    t = generate(STEADY_CFG)
+    obj = json.loads(t.to_json())
+    obj["version"] = TRACE_VERSION + 1
+    with pytest.raises(ValueError, match="version"):
+        Trace.from_json(json.dumps(obj))
+
+
+def test_clipped_fits_smaller_budget():
+    t = generate(STEADY_CFG)
+    c = t.clipped(8)
+    assert all(r.total_tokens <= 8 for r in c.requests)
+    assert all(r.max_new >= 1 and len(r.prompt) >= 1 for r in c.requests)
+    assert len(c.requests) == len(t.requests)
+    # a budget everything already fits is the identity
+    assert t.clipped(32) == t
+
+
+def test_total_tokens_property():
+    r = TrafficRequest(rid=0, arrival_s=0.0, session=0,
+                       prompt=(1, 2, 3), max_new=5)
+    assert r.total_tokens == 8
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    {"pattern": "uniform"},
+    {"rate_rps": 0.0},
+    {"duration_s": -1.0},
+    {"burst": 0.5},
+    {"prompt_mix": ()},
+    {"prompt_mix": ((0, 4, 1.0),)},
+    {"output_mix": ((4, 2, 1.0),)},
+    {"output_mix": ((2, 4, 0.0),)},
+])
+def test_validate_rejects_malformed_config(bad):
+    cfg = TrafficConfig(**{**TrafficConfig().__dict__, **bad})
+    with pytest.raises(ValueError):
+        generate(cfg)

@@ -50,6 +50,8 @@ DOCTEST_MODULES = (
     "repro.serving.kv_cache",
     "repro.serving.tp_lm",
     "repro.serving.engine",
+    "repro.serving.fleet",
+    "repro.serving.traffic",
 )
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
